@@ -1,0 +1,44 @@
+"""Shared helpers for the benchmark modules.
+
+Every module exposes ``rows() -> list[dict]`` (the table/figure data)
+and ``main()`` printing a CSV; ``benchmarks/run.py`` drives them all and
+asserts the paper-level claims that are checkable on CPU.
+"""
+
+from __future__ import annotations
+
+import csv
+import io
+import time
+from typing import Callable, Dict, List
+
+
+def print_csv(name: str, rows: List[Dict]) -> str:
+    if not rows:
+        print(f"# {name}: no rows")
+        return ""
+    fields: List[str] = []
+    for r in rows:
+        for k in r:
+            if k not in fields:
+                fields.append(k)
+    buf = io.StringIO()
+    w = csv.DictWriter(buf, fieldnames=fields, restval="")
+    w.writeheader()
+    for r in rows:
+        w.writerow(r)
+    out = buf.getvalue()
+    print(f"# --- {name} ---")
+    print(out, end="")
+    return out
+
+
+def timed(fn: Callable, *args, n: int = 3, **kw):
+    """(result, best_us_per_call)."""
+    best = float("inf")
+    res = None
+    for _ in range(n):
+        t0 = time.perf_counter()
+        res = fn(*args, **kw)
+        best = min(best, (time.perf_counter() - t0) * 1e6)
+    return res, best

@@ -1,0 +1,77 @@
+"""Kernel-level benchmark: the composed-precision inversion datapath.
+
+On CPU we cannot time TPU kernels; what IS measurable here and maps to
+the paper's claims:
+
+  * accuracy ladder — bits recovered by each stage (NS-only, +Neumann,
+    +refinement), paper Fig. 4 analogue on the bf16/MXU regime;
+  * HBM-traffic model — bytes the VMEM-resident kernel avoids vs the
+    streaming XLA implementation (the memory-roofline motivation for
+    kernels/neumann_inv.py), per SOI block size.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import print_csv
+
+
+def accuracy_ladder(n: int = 128, seed: int = 0):
+    from repro.kernels import neumann_inv
+
+    rng = np.random.default_rng(seed)
+    m = rng.standard_normal((1, n, n)).astype(np.float32)
+    a = np.einsum("bij,bkj->bik", m, m) / n
+    damp = 0.03 * np.trace(a, axis1=1, axis2=2) / n
+    ad = a + damp[:, None, None] * np.eye(n, dtype=np.float32)
+    exact = np.linalg.inv(ad.astype(np.float64))
+
+    out = []
+    for tag, kw in (
+        ("ns_only", dict(ns_iters=20, taylor_terms=1, refine_steps=0)),
+        ("ns+neumann", dict(ns_iters=20, taylor_terms=4,
+                            refine_steps=0)),
+        ("ns+neumann+refine", dict(ns_iters=20, taylor_terms=4,
+                                   refine_steps=2)),
+    ):
+        inv = np.asarray(neumann_inv(a, damp, **kw))
+        rel = np.max(np.abs(inv - exact)) / np.max(np.abs(exact))
+        out.append({"stage": tag,
+                    "rel_err": float(rel),
+                    "bits": round(float(-np.log2(max(rel, 1e-30))), 1)})
+    return out
+
+
+def traffic_model():
+    """HBM bytes per block inverse: streaming-XLA vs VMEM-resident.
+
+    Streaming: every matmul reads 2 and writes 1 (n,n) fp32 buffer;
+    the composed inverse runs ~(2*ns + 2*(taylor-1) + 2*refine) matmuls.
+    VMEM-resident kernel: one read + one write of the block, period.
+    """
+    ns, taylor, refine = 14, 4, 1
+    matmuls = 2 * ns + 2 * (taylor - 1) + 2 * refine
+    out = []
+    for n in (128, 256, 512, 1024):
+        blk = n * n * 4
+        stream = matmuls * 3 * blk
+        fused = 2 * blk
+        out.append({"block": n,
+                    "streaming_mb": round(stream / 1e6, 1),
+                    "vmem_resident_mb": round(fused / 1e6, 2),
+                    "traffic_reduction_x": round(stream / fused, 1)})
+    return out
+
+
+def rows():
+    return accuracy_ladder() + traffic_model()
+
+
+def main():
+    print_csv("kernel_accuracy_ladder", accuracy_ladder())
+    print_csv("kernel_traffic_model", traffic_model())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,92 @@
+"""§Roofline assembly: read results/dryrun/*.json (written by
+launch/dryrun.py) into the per-(arch x shape x mesh) table —
+three terms in seconds, dominant bottleneck, MODEL_FLOPS/HLO_FLOPS
+usefulness ratio, HBM fit."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import print_csv
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results",
+                       "dryrun")
+HBM_PER_CHIP = 16e9      # v5e-class
+
+
+def load(results_dir: str = RESULTS):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def rows(results_dir: str = RESULTS, program: str = None):
+    out = []
+    for rec in load(results_dir):
+        if rec.get("status") != "ok":
+            out.append({"arch": rec["arch"], "shape": rec["shape"],
+                        "mesh": rec.get("mesh", "?"),
+                        "program": "-", "status": rec["status"],
+                        "t_compute_ms": "", "t_memory_ms": "",
+                        "t_collective_ms": "", "bottleneck": "",
+                        "useful_flops_frac": "", "hbm_gb": "",
+                        "fits_hbm": ""})
+            continue
+        for pname, p in rec["programs"].items():
+            if program and pname != program:
+                continue
+            r = p["roofline"]
+            chips = r["chips"]
+            mf = p.get("model_flops", 0.0)
+            hlo_global = r["flops_per_dev"] * chips
+            peak = r.get("peak_hbm_per_dev") or 0.0
+            out.append({
+                "arch": rec["arch"], "shape": rec["shape"],
+                "mesh": rec["mesh"], "program": pname, "status": "ok",
+                "t_compute_ms": round(1e3 * r["t_compute_s"], 2),
+                "t_memory_ms": round(1e3 * r["t_memory_s"], 2),
+                "t_collective_ms": round(1e3 * r["t_collective_s"], 2),
+                "bottleneck": r["bottleneck"],
+                "useful_flops_frac":
+                    round(mf / hlo_global, 3) if hlo_global else "",
+                "hbm_gb": round(peak / 1e9, 2),
+                "fits_hbm": bool(peak <= HBM_PER_CHIP),
+            })
+    return out
+
+
+def _summarize(tag, rs):
+    print_csv(f"roofline_table_{tag}", rs)
+    n_fit = sum(1 for r in rs if r.get("fits_hbm") is True)
+    n_ok = sum(1 for r in rs if r["status"] == "ok")
+    n_skip = sum(1 for r in rs if r["status"] == "skipped")
+    print_csv(f"roofline_summary_{tag}", [{
+        "cells_ok": n_ok, "cells_skipped": n_skip,
+        "programs_fitting_hbm": n_fit}])
+
+
+def main():
+    base = os.path.join(os.path.dirname(__file__), "..", "results")
+    dirs = [("baseline", os.path.join(base, "dryrun_baseline")),
+            ("optimized", os.path.join(base, "dryrun_opt")),
+            ("latest", os.path.join(base, "dryrun"))]
+    seen = False
+    for tag, d in dirs:
+        if tag == "latest" and seen:
+            continue
+        rs = rows(d)
+        if rs:
+            seen = True
+            _summarize(tag, rs)
+    if not seen:
+        print("# roofline: no dry-run results found (run "
+              "`python -m repro.launch.dryrun --arch all --shape all "
+              "--both-meshes` first)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,89 @@
+"""Benchmark driver: one module per paper table/figure.
+
+  python -m benchmarks.run            # everything
+  python -m benchmarks.run --fast     # skip the slow LM-convergence run
+
+Prints each table as CSV plus a final reproduction scorecard comparing
+our derived headline numbers against the paper's reported values.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from benchmarks.common import print_csv
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    args = ap.parse_args(argv)
+
+    from benchmarks import (
+        area,
+        dse,
+        energy,
+        inv_convergence,
+        kernel_bench,
+        kfac_convergence,
+        mapping_impact,
+        roofline,
+        soi_precision,
+        soi_sizes,
+        speedup,
+    )
+
+    scorecard = []
+    failures = 0
+
+    def run(name, fn):
+        nonlocal failures
+        t0 = time.monotonic()
+        try:
+            fn()
+            print(f"# [{name}] done in {time.monotonic() - t0:.1f}s\n")
+        except Exception:
+            failures += 1
+            print(f"# [{name}] FAILED:\n{traceback.format_exc()}\n")
+
+    def score(entries):
+        if isinstance(entries, dict):
+            entries = [entries]
+        scorecard.extend(entries)
+
+    run("table1_soi_sizes", soi_sizes.main)
+    run("table2_area", area.main)
+    score(area.headline())
+    run("fig3_soi_precision", soi_precision.main)
+    run("fig4b_inv_convergence", inv_convergence.main)
+    score(inv_convergence.headline())
+    run("fig10_dse", dse.main)
+    score(dse.headline())
+    run("fig11_speedup", speedup.main)
+    score(speedup.headline())
+    run("fig12_energy", energy.main)
+    score(energy.headline())
+    run("fig13_mapping", mapping_impact.main)
+    score(mapping_impact.headline())
+    run("kernel_bench", kernel_bench.main)
+    if not args.fast:
+        from benchmarks import grad_compression
+        run("grad_compression_dcn", grad_compression.main)
+    if args.fast:
+        run("sec6c_kfac_convergence(quadratic only)",
+            lambda: print_csv("sec6c_kfac_convergence",
+                              kfac_convergence.rows(fast=True)))
+    else:
+        run("sec6c_kfac_convergence", kfac_convergence.main)
+    run("roofline", roofline.main)
+
+    print_csv("reproduction_scorecard", [
+        {k: str(v) for k, v in e.items()} for e in scorecard])
+    return failures
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,70 @@
+"""Walkthrough of the paper's Fig. 5 example, small enough to read:
+8-bit matrix, 4-bit input/result, 2-bit DAC/ADC, 4-bit cells — the
+exact toy configuration the paper uses to illustrate Loop b / Loop x /
+Loop A — then the production-scale 16-bit configuration, then the same
+algorithm as the Pallas TPU kernel (interpret mode).
+
+Run:  PYTHONPATH=src python examples/precision_inv_demo.py
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import numpy as np  # noqa: E402
+
+from repro.core.precision_inv import (  # noqa: E402
+    CircuitConfig,
+    achieved_bits,
+    faithful_inv_apply,
+    quantize_problem,
+)
+
+rng = np.random.default_rng(1)
+
+print("=== Fig. 5 toy: Q_A=8, Q_b=Q_x=4, DAC/ADC=2-bit, 4-bit cells ===")
+toy = CircuitConfig(q_a=8, q_b=4, q_x=4, r_dac=2, r_adc=2, r_c=4, k=1,
+                    n_taylor=4)
+n = 8
+m = rng.standard_normal((n, n))
+A = m @ m.T / n + 0.3 * np.eye(n)
+b = rng.standard_normal(n)
+Aq, bq = quantize_problem(A, b, toy)
+x = faithful_inv_apply(A, b, toy)
+x_ref = np.linalg.solve(Aq, bq)
+print(f"loops: b={toy.loops_b} x={toy.loops_x} A={toy.n_taylor}")
+print(f"cycles (Eqn. 10): {toy.cycles_inv()}")
+print(f"achieved bits vs quantized-problem solve: "
+      f"{achieved_bits(x, x_ref):.1f} (target {toy.q_x})")
+
+print("\n=== production: Q=16, DAC=4, ADC=8, 2x4-bit cells ===")
+cfg = CircuitConfig()
+n = 128
+m = rng.standard_normal((n, n))
+A = m @ m.T / n
+A += 0.03 * np.trace(A) / n * np.eye(n)
+b = rng.standard_normal(n)
+Aq, bq = quantize_problem(A, b, cfg)
+x, trace = faithful_inv_apply(A, b, cfg, return_trace=True)
+x_ref = np.linalg.solve(Aq, bq)
+print(f"cycles (Eqn. 10): {cfg.cycles_inv()}  "
+      f"fused (Eqn. 14): {cfg.cycles_inv_fused()}")
+print("bits after each Loop-A iteration:")
+for i, xt in enumerate(trace[:8]):
+    print(f"  iter {i + 1:2d}: {achieved_bits(xt, x_ref):5.1f} bits")
+final = achieved_bits(x, x_ref)
+print(f"final: {final:.1f} bits (paper bar: 16)")
+assert final >= 16.0
+
+print("\n=== same algorithm as the Pallas TPU kernel ===")
+from repro.kernels import neumann_inv  # noqa: E402
+
+blocks = np.stack([A]).astype(np.float32)
+damp = np.asarray([0.0], np.float32)      # A already damped above
+inv = np.asarray(neumann_inv(blocks, damp, ns_iters=20,
+                             taylor_terms=4, refine_steps=2))[0]
+resid = np.max(np.abs(inv @ A - np.eye(n)))
+print(f"kernel |MA - I|_inf = {resid:.2e}")
+assert resid < 1e-3
+print("\nprecision_inv_demo OK")

@@ -1,0 +1,76 @@
+"""Quickstart: the paper's technique in 60 lines.
+
+1. Build a Tikhonov-damped SOI block (what K-FAC hands the hardware).
+2. Invert it three ways:
+     a. fp32 linalg (reference),
+     b. plain bf16 (the "8-bit INV crossbar" — too coarse, paper Fig. 3),
+     c. RePAST composed-precision (low-precision primitives + Loop A/x/b
+        — paper Sec. III), on both the faithful fixed-point circuit
+        model and the TPU bf16/MXU path.
+3. Use it: one K-FAC-preconditioned step on an ill-conditioned
+   quadratic vs plain SGD.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core.precision_inv import (
+    CircuitConfig,
+    achieved_bits,
+    composed_inverse,
+    faithful_inv_apply,
+    quantize_problem,
+)
+
+rng = np.random.default_rng(0)
+n = 256
+
+# -- 1. a damped SOI block ---------------------------------------------------
+m = rng.standard_normal((n, n))
+A = m @ m.T / n
+lam = 0.03 * np.trace(A) / n
+A += lam * np.eye(n)
+b = rng.standard_normal(n)
+
+x_ref = np.linalg.solve(A, b)
+
+# -- 2a. faithful circuit model (4-bit cells, 4-bit DAC, 8-bit ADC) ----------
+# n_taylor: the paper's 18 covers 99% of ITS matrix ensemble (Fig. 4b);
+# this demo's kappa~130 block needs a few more Loop-A rounds — the knob
+# the paper exposes for exactly this purpose (Sec. III-A.3).
+cfg = CircuitConfig(n_taylor=26)
+Aq, bq = quantize_problem(A, b, cfg)
+x_circuit = faithful_inv_apply(A, b, cfg)
+bits_circuit = achieved_bits(x_circuit, np.linalg.solve(Aq, bq))
+
+# -- 2b. plain low-precision (what a bare 8-bit INV crossbar gives) ----------
+A_bf16 = np.asarray(jnp.asarray(A, jnp.bfloat16), np.float64)
+x_low = np.linalg.solve(A_bf16, b)
+bits_low = achieved_bits(x_low, x_ref)
+
+# -- 2c. TPU path: composed-precision inverse, all matmuls bf16 --------------
+M = np.asarray(composed_inverse(jnp.asarray(A, jnp.float32), 0.0,
+                                ns_iters=20, taylor_terms=4,
+                                refine_steps=2))
+x_mxu = M @ b
+bits_mxu = achieved_bits(x_mxu, x_ref)
+
+print(f"target accuracy (paper):          >= 16 bits")
+print(f"plain bf16 primitive alone:       {bits_low:5.1f} bits")
+print(f"faithful circuit (Loop A/x/b):    {bits_circuit:5.1f} bits")
+print(f"TPU composed-precision (MXU):     {bits_mxu:5.1f} bits")
+assert bits_circuit >= 16.0, "circuit model must hit the paper's 16-bit bar"
+assert bits_mxu > bits_low + 4, "composition must beat the bare primitive"
+
+# -- 3. why second order: one preconditioned step vs SGD ---------------------
+g = A @ rng.standard_normal(n)          # a gradient with curvature mix
+x_sgd = g / np.abs(np.linalg.eigvalsh(A)).max()     # best-case SGD step
+x_kfac = M @ g                                       # preconditioned step
+resid_sgd = np.linalg.norm(g - A @ x_sgd) / np.linalg.norm(g)
+resid_kfac = np.linalg.norm(g - A @ x_kfac) / np.linalg.norm(g)
+print(f"\none-step residual, SGD-scaled:    {resid_sgd:.3f}")
+print(f"one-step residual, preconditioned: {resid_kfac:.2e}")
+print("\nquickstart OK")

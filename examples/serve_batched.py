@@ -1,0 +1,36 @@
+"""Batched serving example: prefill + decode with KV cache on a reduced
+qwen2-family model; checks prefill/decode consistency and reports
+throughput. The decode_32k / long_500k dry-run cells lower exactly this
+decode_step at production shapes.
+
+Run:  PYTHONPATH=src python examples/serve_batched.py
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import numpy as np  # noqa: E402
+
+from repro.launch.serve import main as serve_main  # noqa: E402
+
+
+def main():
+    summary, gen = serve_main([
+        "--arch", "qwen2-0.5b", "--smoke",
+        "--batch", "4", "--prompt-len", "32", "--gen", "12",
+    ])
+    assert gen.shape == (4, 12)
+    assert np.all(gen >= 0)
+    # deterministic greedy decode => re-running must reproduce
+    summary2, gen2 = serve_main([
+        "--arch", "qwen2-0.5b", "--smoke",
+        "--batch", "4", "--prompt-len", "32", "--gen", "12",
+    ])
+    assert np.array_equal(gen, gen2), "greedy decode must be deterministic"
+    print("serve_batched OK")
+
+
+if __name__ == "__main__":
+    main()

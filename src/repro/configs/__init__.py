@@ -1,0 +1,2 @@
+from repro.configs.base import ModelConfig, ShapeCfg, SHAPES  # noqa: F401
+from repro.configs.registry import ARCHS, get_config, get_smoke_config  # noqa: F401

@@ -1,0 +1,50 @@
+"""Gauss-Newton second-order variant (paper Sec. II-A.2).
+
+The Hessian block is approximated ``H ~= J B J^T`` with ``B = I`` for
+cross-entropy (paper), which in the factored view means preconditioning
+with the output-side factor only: ``dW <- dL/dW G^{-1}`` (A = I). We reuse
+the K-FAC machinery with A factors disabled — this is also the ablation
+point the paper compares in its WU-graph mapping discussion.
+"""
+
+from __future__ import annotations
+
+from typing import Mapping
+
+import jax
+
+from repro.core import kfac, soi
+from repro.core.kfac import KFACConfig, KFACState
+from repro.core.soi import LinearSpec
+
+
+def gn_specs(specs: Mapping[str, LinearSpec]) -> dict:
+    """Strip A factors: every linear keeps only its G factor."""
+    return {
+        name: LinearSpec(d_in=1, d_out=s.d_out, stack=s.stack,
+                         share_a_with=None)
+        for name, s in specs.items()
+    }
+
+
+def precondition(grads, state: KFACState, specs: Mapping[str, LinearSpec],
+                 cfg: KFACConfig):
+    """G-side-only preconditioning: ``dW G^{-1}`` per diagonal block."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(grads)
+    out = []
+    for path, g in flat:
+        name = kfac._path_str(path)
+        if name in specs:
+            g_inv = state.inverses[name]["G_inv"]
+            bs = g_inv.shape[-1]
+            import jax.numpy as jnp
+            d_out = g.shape[-1]
+            gp = soi.pad_to_blocks(g, -1, bs)
+            nb = gp.shape[-1] // bs
+            gp = gp.reshape(g.shape[:-1] + (nb, bs))
+            o = jnp.einsum("...djb,...jbc->...djc", gp, g_inv,
+                           preferred_element_type=jnp.float32)
+            out.append(o.reshape(g.shape[:-1] + (nb * bs,))[..., :d_out])
+        else:
+            out.append(g)
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,289 @@
+"""K-FAC second-order optimizer with RePAST composed-precision inversion.
+
+Paper mapping (RePAST Sec. II-A, V-A):
+  FP/BP graphs  -> ordinary forward/backward inside ``train_step``.
+  WU graph      -> :func:`precondition` + :func:`apply_updates`
+                   (``dW = A^{-1} (dL/dW) G^{-1}``, Eqn. 3).
+  SU graph      -> :func:`stats_grams` (factor accumulation, every
+                   ``stats_every`` steps on a token subsample — the paper
+                   updates SOI every 10 batches) and
+                   :func:`refresh_inverses` (the paper's high-precision
+                   matrix inversion, Sec. III, on every diagonal block).
+
+The factor-gradient (``g = dL/dy``) capture uses the *tap* trick: models
+add a zeros "tap" tensor to every factored linear's output; the gradient
+w.r.t. the tap is exactly the per-token output gradient, from which the G
+Gram is formed. This keeps the whole pipeline purely functional (works
+under jit/scan/pjit) without graph rewriting.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Mapping, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import soi
+from repro.core.precision_inv import composed_inverse
+from repro.core.soi import LinearSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class KFACConfig:
+    lr: float = 3e-2
+    momentum: float = 0.9
+    damping: float = 0.03           # relative Tikhonov (of mean block trace)
+    ema_decay: float = 0.95         # factor EMA
+    block_size: int = 1024          # paper's INV-crossbar group limit
+    stats_every: int = 10           # SU-graph cadence (paper: 10 batches)
+    inv_every: int = 10             # inverse refresh cadence
+    stats_batch: int = 8            # SU subsample: sequences per pass
+    stats_seq: int = 1024           # SU subsample: tokens per sequence
+    kl_clip: float = 1.0            # trust-region scale clip
+    # inversion method: "composed" = paper scheme on MXU primitives,
+    # "exact" = jnp.linalg.inv baseline (for ablation)
+    # inversion method: "composed" = paper scheme (NS + Neumann + refine),
+    # "composed_fast" = beyond-paper variant dropping the Neumann stage —
+    # on the MXU the refinement against full-precision A subsumes Loop A
+    # at equal accuracy (the analog hardware can't touch full A cheaply;
+    # the MXU can — EXPERIMENTS.md §Perf 3.5), "exact" = linalg baseline
+    inv_method: str = "composed"
+    ns_iters: int = 20              # Newton-Schulz iters (INV primitive)
+    taylor_terms: int = 4           # Loop A terms ("composed" path)
+    refine_steps: int = 2           # Loop x analogue
+    weight_decay: float = 0.0
+    # first-order path (non-factored params): adam-style
+    adam_b1: float = 0.9
+    adam_b2: float = 0.999
+    adam_eps: float = 1e-8
+
+
+class KFACState(NamedTuple):
+    step: jax.Array                 # int32 scalar
+    factors: Any                    # name -> {"A": ..., "G": ...}
+    inverses: Any                   # name -> {"A_inv": ..., "G_inv": ...}
+    momentum: Any                   # pytree like params
+    adam_mu: Any                    # pytree like params (first-order path)
+    adam_nu: Any
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def init(params: Any, specs: Mapping[str, LinearSpec],
+         cfg: KFACConfig) -> KFACState:
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    return KFACState(
+        step=jnp.zeros((), jnp.int32),
+        factors=soi.init_factors(specs, cfg.block_size),
+        inverses=soi.init_inverses(specs, cfg.block_size),
+        momentum=zeros,
+        adam_mu=zeros,
+        adam_nu=jax.tree.map(jnp.zeros_like, params),
+    )
+
+
+# ---------------------------------------------------------------------------
+# SU graph: factor statistics
+# ---------------------------------------------------------------------------
+
+def make_taps(specs: Mapping[str, LinearSpec], tokens: int) -> dict:
+    """Zero tap tensors, one per factored linear: (*stack, tokens, d_out).
+
+    For MoE linears the token dim is the per-expert capacity (the model's
+    dispatch buffer feeds the tap)."""
+    return {name: jnp.zeros(spec.stack + (tokens, spec.d_out), jnp.float32)
+            for name, spec in specs.items()}
+
+
+def stats_grams(
+    loss_with_taps: Callable[..., Tuple[jax.Array, dict]],
+    params: Any,
+    taps: dict,
+    batch: Any,
+    specs: Mapping[str, LinearSpec],
+    bs: int,
+) -> Tuple[dict, dict, jax.Array]:
+    """Run one SU pass: returns (A_grams, G_grams, loss).
+
+    ``loss_with_taps(params, taps, batch) -> (loss, acts)`` where ``acts``
+    maps each factored-linear name to its input activations
+    (*stack, T, d_in) (or a precomputed blocked Gram, shape
+    (*stack, nb, bs, bs)).
+    """
+    def f(p, t):
+        loss, acts = loss_with_taps(p, t, batch)
+        return loss, acts
+
+    (loss, acts), tap_grads = jax.value_and_grad(
+        f, argnums=1, has_aux=True)(params, taps)
+
+    a_grams, g_grams = {}, {}
+    for name, spec in specs.items():
+        g = tap_grads[name]                        # (*stack, T, d_out)
+        t = g.shape[-2]
+        # Fisher convention: G = E_t[g g^T] * T (sum over tokens of the
+        # batch-mean gradient outer products).
+        g_grams[name] = soi.blocked_gram(g, bs) * jnp.asarray(
+            t, jnp.float32)
+        if spec.share_a_with is None:
+            a = acts[name]
+            if a.ndim >= 2 and a.shape[-1] == a.shape[-2] and a.ndim == len(
+                    spec.stack) + 3:
+                a_grams[name] = a                  # already a blocked gram
+            else:
+                a_grams[name] = soi.blocked_gram(a, bs)
+    return a_grams, g_grams, loss
+
+
+def update_factors(state: KFACState, a_grams: dict, g_grams: dict,
+                   cfg: KFACConfig) -> KFACState:
+    """EMA the new Grams into the running factors."""
+    d = cfg.ema_decay
+    new_factors = {}
+    for name, f in state.factors.items():
+        nf = dict(f)
+        if "A" in f and name in a_grams:
+            nf["A"] = d * f["A"] + (1.0 - d) * a_grams[name]
+        if name in g_grams:
+            nf["G"] = d * f["G"] + (1.0 - d) * g_grams[name]
+        new_factors[name] = nf
+    return state._replace(factors=new_factors)
+
+
+# ---------------------------------------------------------------------------
+# Inverse refresh: the paper's high-precision INV on every diagonal block
+# ---------------------------------------------------------------------------
+
+def _invert_blocks(f: jax.Array, cfg: KFACConfig) -> jax.Array:
+    """Invert (..., bs, bs) damped blocks with the composed-precision
+    scheme (all O(n^3) work in bf16 partial products — see
+    ``core/precision_inv.composed_inverse``)."""
+    lam = soi.tikhonov_damping(f, cfg.damping)[..., None, None]
+    shape = f.shape
+    flat = f.reshape((-1,) + shape[-2:])
+    lam_flat = lam.reshape((-1, 1, 1))
+
+    if cfg.inv_method == "exact":
+        eye = jnp.eye(shape[-1], dtype=f.dtype)
+        out = jnp.linalg.inv(flat + lam_flat * eye)
+    else:
+        taylor = 1 if cfg.inv_method == "composed_fast" \
+            else cfg.taylor_terms
+        out = jax.vmap(
+            lambda a, l: composed_inverse(
+                a, l[0, 0], ns_iters=cfg.ns_iters,
+                taylor_terms=taylor,
+                refine_steps=cfg.refine_steps))(flat, lam_flat)
+    return out.reshape(shape)
+
+
+def refresh_inverses(state: KFACState, cfg: KFACConfig) -> KFACState:
+    new_inv = {}
+    for name, f in state.factors.items():
+        d = {}
+        if "A" in f:
+            d["A_inv"] = _invert_blocks(f["A"], cfg)
+        if "G" in f:
+            d["G_inv"] = _invert_blocks(f["G"], cfg)
+        new_inv[name] = d
+    return state._replace(inverses=new_inv)
+
+
+# ---------------------------------------------------------------------------
+# WU graph: preconditioning + parameter update
+# ---------------------------------------------------------------------------
+
+def precondition(grads: Any, state: KFACState,
+                 specs: Mapping[str, LinearSpec], cfg: KFACConfig) -> Any:
+    """Apply ``A^{-1} g G^{-1}`` to every factored weight's gradient
+    (paper Eqn. 3 / the WU dataflow graph). Non-factored params pass
+    through unchanged (they take the first-order path in
+    :func:`apply_updates`)."""
+    flat = jax.tree_util.tree_flatten_with_path(grads)
+    leaves, treedef = flat
+    out = []
+    for path, g in leaves:
+        name = _path_str(path)
+        if name in specs:
+            from repro.dist.api import factor_axes
+
+            spec = specs[name]
+            inv = state.inverses[name]
+            a_name = spec.share_a_with or name
+            a_inv = state.inverses[a_name]["A_inv"]
+            out.append(soi.block_precondition(
+                g, a_inv, inv["G_inv"], axes=factor_axes(name)))
+        else:
+            out.append(g)
+    return jax.tree_util.tree_unflatten(treedef, [x for x in out])
+
+
+def apply_updates(params: Any, grads: Any, state: KFACState,
+                  specs: Mapping[str, LinearSpec],
+                  cfg: KFACConfig) -> Tuple[Any, KFACState]:
+    """Momentum + trust-region-clipped update.
+
+    Factored params: preconditioned direction with heavy-ball momentum.
+    Non-factored params (norms, embeddings, gates): Adam.
+    """
+    pre = precondition(grads, state, specs, cfg)
+
+    # KL/trust-region clip: scale the whole preconditioned step so that
+    # sum(d * g) <= kl_clip (simplified from K-FAC's quadratic model).
+    dot = sum(jnp.sum(a * b) for a, b in zip(
+        jax.tree.leaves(pre), jax.tree.leaves(grads)))
+    nu = jnp.minimum(1.0, cfg.kl_clip / (cfg.lr * jnp.abs(dot) + 1e-12))
+
+    step = state.step + 1
+    stepf = step.astype(jnp.float32)
+    names = {name for name in specs}
+
+    flat_p = jax.tree_util.tree_flatten_with_path(params)
+    leaves_p, treedef = flat_p
+    leaves_pre = jax.tree.leaves(pre)
+    leaves_g = jax.tree.leaves(grads)
+    leaves_m = jax.tree.leaves(state.momentum)
+    leaves_mu = jax.tree.leaves(state.adam_mu)
+    leaves_nu = jax.tree.leaves(state.adam_nu)
+
+    new_p, new_m, new_mu, new_nu = [], [], [], []
+    for (path, p), d, g, m, mu, nvu in zip(
+            leaves_p, leaves_pre, leaves_g, leaves_m, leaves_mu, leaves_nu):
+        name = _path_str(path)
+        if name in names:
+            m2 = cfg.momentum * m + d * nu
+            upd = cfg.lr * m2 + cfg.lr * cfg.weight_decay * p
+            new_p.append(p - upd)
+            new_m.append(m2)
+            new_mu.append(mu)
+            new_nu.append(nvu)
+        else:
+            mu2 = cfg.adam_b1 * mu + (1 - cfg.adam_b1) * g
+            nu2 = cfg.adam_b2 * nvu + (1 - cfg.adam_b2) * g * g
+            mhat = mu2 / (1 - cfg.adam_b1 ** stepf)
+            nhat = nu2 / (1 - cfg.adam_b2 ** stepf)
+            new_p.append(p - cfg.lr * mhat / (jnp.sqrt(nhat) + cfg.adam_eps))
+            new_m.append(m)
+            new_mu.append(mu2)
+            new_nu.append(nu2)
+
+    params2 = jax.tree_util.tree_unflatten(treedef, new_p)
+    state2 = state._replace(
+        step=step,
+        momentum=jax.tree_util.tree_unflatten(treedef, new_m),
+        adam_mu=jax.tree_util.tree_unflatten(treedef, new_mu),
+        adam_nu=jax.tree_util.tree_unflatten(treedef, new_nu),
+    )
+    return params2, state2

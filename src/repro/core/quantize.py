@@ -1,0 +1,201 @@
+"""Fixed-point quantization and bit-slicing utilities.
+
+These model the digital view of the ReRAM datapath in RePAST:
+
+- DAC inputs are ``R_DAC``-bit slices of a ``Q_b``-bit fixed-point vector
+  (paper Eqn. 6, "Loop b").
+- ADC outputs deliver ``R_ADC`` bits of the analog result per conversion
+  ("Loop x").
+- A ReRAM cell stores ``R_c`` bits; ``k`` chained crossbars hold the top
+  ``k * R_c`` bits of the matrix (``A_H``); the remainder is ``A_L``
+  (paper Sec. III-A.3).
+
+Everything is implemented with jnp so it is jit-able and differentiable
+where it needs to be (straight-through estimators are NOT needed here:
+quantization only appears in the preconditioner path, never in the loss).
+
+Conventions: a value ``v`` with ``bits`` fractional bits on scale ``s``
+is represented as ``v ≈ s * round(v / s * 2**bits) * 2**-bits``. All
+quantizers are symmetric and saturating.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def amax_scale(x: jax.Array, axis=None) -> jax.Array:
+    """Symmetric max-abs scale (never zero)."""
+    s = jnp.max(jnp.abs(x), axis=axis, keepdims=axis is not None)
+    return jnp.where(s == 0, jnp.ones_like(s), s)
+
+
+def quantize_fixed(x: jax.Array, bits: int, scale: jax.Array) -> jax.Array:
+    """Quantize ``x`` onto a ``bits``-fractional-bit grid of ``scale``.
+
+    Returns the *dequantized* value (i.e. a float on the grid). Values are
+    clipped to [-scale, scale).
+    """
+    step = scale * (2.0 ** (-bits))
+    q = jnp.round(x / step)
+    q = jnp.clip(q, -(2.0 ** bits), 2.0 ** bits - 1)
+    return q * step
+
+
+def quantize_int(x: jax.Array, bits: int, scale: jax.Array) -> jax.Array:
+    """Quantize to signed integer grid codes in [-2**bits, 2**bits - 1]."""
+    step = scale * (2.0 ** (-bits))
+    q = jnp.round(x / step)
+    return jnp.clip(q, -(2.0 ** bits), 2.0 ** bits - 1)
+
+
+def split_hi_lo_fixed(
+    x: jax.Array, total_bits: int, hi_bits: int, scale: jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    """Split a ``total_bits`` fixed-point value into hi/lo parts.
+
+    ``x_q = x_hi + x_lo * 2**-hi_bits`` where
+      - ``x_hi`` is ``x`` truncated to its top ``hi_bits`` fractional bits,
+      - ``x_lo = (x_q - x_hi) * 2**hi_bits`` holds the remaining
+        ``total_bits - hi_bits`` bits, pre-shifted so its magnitude is
+        comparable to ``scale`` (paper: ``A_L = (A - A_H) * 2**(k*R_c)``).
+
+    Mirrors the paper's matrix split: ``A_H`` programmed into INV
+    crossbars, ``A_L`` into a VMM crossbar.
+    """
+    xq = quantize_fixed(x, total_bits, scale)
+    step_hi = scale * (2.0 ** (-hi_bits))
+    hi = jnp.floor(xq / step_hi) * step_hi
+    lo = (xq - hi) * (2.0 ** hi_bits)
+    return hi, lo
+
+
+def bit_slices_fixed(
+    x: jax.Array, total_bits: int, slice_bits: int, scale: jax.Array
+) -> list[jax.Array]:
+    """Decompose a quantized value into ``ceil(total/slice)`` unsigned-ish
+    slices, LSB-first, such that ``sum_i slices[i] * 2**(i*slice_bits - total_bits) * scale``
+    reconstructs the value.  Used by "Loop b" (DAC slicing).
+
+    Each returned slice is a float holding an integer in
+    ``[0, 2**slice_bits)`` (plus a sign carried on the leading slice),
+    exactly what an ``R_DAC``-bit DAC can emit after the driver handles
+    two's-complement.
+    """
+    n = -(-total_bits // slice_bits)
+    q = quantize_int(x, total_bits, scale)  # codes in [-2**T, 2**T)
+    # Work with a sign/magnitude representation: the analog driver applies
+    # the sign by swapping the differential pair; each slice is unsigned.
+    sign = jnp.sign(q)
+    mag = jnp.abs(q)
+    out = []
+    for _ in range(n):
+        out.append(sign * jnp.mod(mag, 2.0 ** slice_bits))
+        mag = jnp.floor(mag / (2.0 ** slice_bits))
+    return out
+
+
+def reconstruct_slices(
+    slices: list[jax.Array], total_bits: int, slice_bits: int, scale: jax.Array
+) -> jax.Array:
+    """Inverse of :func:`bit_slices_fixed` (the digital S+A unit)."""
+    acc = jnp.zeros_like(slices[0])
+    for i, s in enumerate(slices):
+        acc = acc + s * (2.0 ** (i * slice_bits))
+    return acc * scale * (2.0 ** (-total_bits))
+
+
+# ---------------------------------------------------------------------------
+# TPU production path: hi/lo decomposition in bf16 ("bit-slicing" for the MXU)
+# ---------------------------------------------------------------------------
+
+def split_hi_lo_bf16(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Split an fp32 array into two bf16 arrays such that
+    ``hi + lo ≈ x`` with ~16 mantissa bits of effective precision.
+
+    This is the MXU analogue of programming ``A_H`` into INV crossbars and
+    ``A_L`` into VMM crossbars: each half is representable by the
+    low-precision compute primitive (bf16), their composition recovers
+    (near-)fp32 precision.
+    """
+    x = x.astype(jnp.float32)
+    hi = x.astype(jnp.bfloat16)
+    lo = (x - hi.astype(jnp.float32)).astype(jnp.bfloat16)
+    return hi, lo
+
+
+def hilo_matmul(a: jax.Array, b: jax.Array, *, precision=None) -> jax.Array:
+    """fp32-accurate matmul where every MXU operand is bf16.
+
+    ``a @ b = (a_hi + a_lo) @ (b_hi + b_lo)`` expanded into three partial
+    products (the ``a_lo @ b_lo`` term is below the fp32 noise floor and
+    dropped — same argument as the paper's Eqn. 13 dropping
+    ``A_1L·A_2L``), each accumulated in fp32.
+    """
+    a_hi, a_lo = split_hi_lo_bf16(a)
+    b_hi, b_lo = split_hi_lo_bf16(b)
+
+    def mm(x, y):
+        return jax.lax.dot_general(
+            x, y, (((x.ndim - 1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32, precision=precision)
+
+    return mm(a_hi, b_hi) + mm(a_hi, b_lo) + mm(a_lo, b_hi)
+
+
+def hilo_matmul_exact_lhs(a16: jax.Array, b: jax.Array, *,
+                          precision=None) -> jax.Array:
+    """``a16 @ b`` where ``a16`` is *exactly representable* in bf16
+    (e.g. the A_H slice, which is bf16-rounded by construction): its lo
+    slice is identically zero, so only two partial products are needed
+    (EXPERIMENTS.md §Perf 3.1 — a 1/3 MXU-flop saving on every matmul
+    against a hi-slice operand)."""
+    b_hi, b_lo = split_hi_lo_bf16(b)
+    a16 = a16.astype(jnp.bfloat16)
+
+    def mm(x, y):
+        return jax.lax.dot_general(
+            x, y, (((x.ndim - 1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32, precision=precision)
+
+    return mm(a16, b_hi) + mm(a16, b_lo)
+
+
+@dataclasses.dataclass(frozen=True)
+class CircuitConfig:
+    """Parameters of the modeled RePAST datapath (paper Sec. III/VI-A)."""
+
+    q_a: int = 16       # bits of the SOI matrix A
+    q_b: int = 16       # bits of the rhs vector b
+    q_x: int = 16       # bits of the solution x
+    r_dac: int = 4      # DAC resolution (paper: 4-bit)
+    r_adc: int = 8      # ADC resolution (paper: 8-bit)
+    r_c: int = 4        # bits per ReRAM cell (paper: 4-bit)
+    k: int = 2          # chained INV crossbars -> A_H has k*r_c bits
+    n_taylor: int = 18  # Loop A iterations (paper Fig. 4(b): 18)
+
+    @property
+    def hi_bits(self) -> int:
+        return self.k * self.r_c
+
+    @property
+    def loops_x(self) -> int:
+        return -(-self.q_x // self.r_adc)
+
+    @property
+    def loops_b(self) -> int:
+        return -(-self.q_b // self.r_dac)
+
+    def cycles_inv(self) -> int:
+        """Paper Eqn. 10: cycles of one high-precision INV."""
+        return self.n_taylor * (
+            2 * self.loops_b * self.loops_x + -(-self.q_x // self.r_dac))
+
+    def cycles_inv_fused(self) -> int:
+        """Paper Eqn. 14: cycles of one fused MM+INV high-precision INV."""
+        return self.n_taylor * (
+            2 * self.loops_b * self.loops_x + 2 * -(-self.q_x // self.r_dac))

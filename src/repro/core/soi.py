@@ -1,0 +1,195 @@
+"""Second-order information (SOI) factor layout.
+
+K-FAC factors each layer's Fisher block into two Kronecker factors
+``A = E[a a^T]`` (input side) and ``G = E[g g^T]`` (output side) — paper
+Sec. II-A. Like RePAST, we approximate each factor block-diagonally with a
+configurable block size (the paper's INV-crossbar group supports blocks up
+to 1024x1024; Fig. 1/13 study the block-size trade-off), store only the
+diagonal blocks, and shard the block dimension across the `model` mesh
+axis — the TPU analogue of distributing blocks over INV crossbar groups.
+
+Shapes
+------
+A linear layer with weight ``(*stack, d_in, d_out)`` (``stack`` are scan /
+expert dims) owns:
+  A        (*stack, nb_in,  bs, bs)
+  G        (*stack, nb_out, bs, bs)
+  A_inv / G_inv    same shapes
+Gradients are preconditioned block-diagonally:
+  dW[i*bs:(i+1)*bs, j*bs:(j+1)*bs] = A_inv[i] @ g[i, j] @ G_inv[j]
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class LinearSpec:
+    """A K-FAC-factored linear layer registered by a model.
+
+    ``name`` must equal the '/'-joined path of the weight inside the model
+    params pytree, so the optimizer can match gradients to factors.
+    """
+
+    d_in: int
+    d_out: int
+    stack: Tuple[int, ...] = ()     # leading stacked dims, e.g. (L,) or (L, E)
+    # Whether this weight's input activations already include the shared
+    # input of a sibling (e.g. q/k/v share A). If set, A stats/inverse are
+    # read from `share_a_with` instead of being stored.
+    share_a_with: str | None = None
+    # Tap token dim is the MoE dispatch capacity rather than the raw
+    # token count (per-expert buffers).
+    cap_tokens: bool = False
+
+
+def n_blocks(d: int, bs: int) -> int:
+    return -(-d // bs)
+
+
+def block_size_for(d: int, cap: int, align: int = 16) -> int:
+    """Mesh-aligned SOI block size for a feature dimension ``d``.
+
+    The paper sizes SOI blocks to fit INV crossbar *groups* ("we can
+    always use the proper SOI matrix sizes to fulfill the limitation of
+    INV crossbars", Sec. IV-A). The TPU analogue: size blocks so the
+    (d) -> (nb, bs) blocking is *shard-local* on an ``align``-way mesh
+    axis — i.e. bs divides the per-shard width d/align — which makes
+    the factor layout, the blocked-gradient reshape and the
+    preconditioning einsum all communication-free (EXPERIMENTS.md
+    §Perf 1.4). Preference order:
+
+      1. d <= cap: one whole block (reshape trivially local);
+      2. largest bs dividing both d and d/align with bs >= 128;
+      3. fallback: cap (pad semantics; only for dims not divisible by
+         the mesh, e.g. MoE d_ff=1408 — noted per-arch).
+    """
+    if d <= cap:
+        return d
+    if d % align == 0:
+        shard = d // align
+        for bs in range(min(cap, shard), 127, -1):
+            if shard % bs == 0 and d % bs == 0:
+                return bs
+    # no aligned size: prefer an exact divisor (no padding waste in the
+    # inversions) before falling back to a padded cap-sized block
+    for bs in range(min(cap, d), 127, -1):
+        if d % bs == 0:
+            return bs
+    return cap
+
+
+def pad_to_blocks(x: jax.Array, axis: int, bs: int) -> jax.Array:
+    d = x.shape[axis]
+    pad = n_blocks(d, bs) * bs - d
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def blocked_gram(a: jax.Array, cap: int) -> jax.Array:
+    """Diagonal-block Gram of activations.
+
+    ``a``: (..., T, d) tokens-by-features. Returns (..., nb, bs, bs)
+    with bs = :func:`block_size_for`(d, cap) and block ``i`` =
+    ``a_i^T a_i / T`` for the i-th feature slab (paper: ``A = a a^T``
+    per diagonal block, Sec. VI-E).
+    """
+    t = a.shape[-2]
+    bs = block_size_for(a.shape[-1], cap)
+    a = pad_to_blocks(a, -1, bs)
+    nb = a.shape[-1] // bs
+    a = a.reshape(a.shape[:-1] + (nb, bs))
+    gram = jnp.einsum("...tib,...tic->...ibc", a, a,
+                      preferred_element_type=jnp.float32)
+    return gram / jnp.asarray(t, jnp.float32)
+
+
+def factor_shapes(spec: LinearSpec, cap: int) -> dict:
+    """Zero-initialized factor pytree for one linear (per-side
+    mesh-aligned block sizes)."""
+    shapes = {}
+    if spec.share_a_with is None:
+        bi = block_size_for(spec.d_in, cap)
+        shapes["A"] = spec.stack + (n_blocks(spec.d_in, bi), bi, bi)
+    bo = block_size_for(spec.d_out, cap)
+    shapes["G"] = spec.stack + (n_blocks(spec.d_out, bo), bo, bo)
+    return shapes
+
+
+def init_factors(specs: Mapping[str, LinearSpec], bs: int) -> dict:
+    out = {}
+    for name, spec in specs.items():
+        out[name] = {k: jnp.zeros(v, jnp.float32)
+                     for k, v in factor_shapes(spec, bs).items()}
+    return out
+
+
+def init_inverses(specs: Mapping[str, LinearSpec], bs: int) -> dict:
+    """Inverses start as identity blocks => first steps are plain SGD."""
+    out = {}
+    for name, spec in specs.items():
+        d = {}
+        for k, shp in factor_shapes(spec, bs).items():
+            eye = jnp.broadcast_to(
+                jnp.eye(shp[-1], dtype=jnp.float32), shp)
+            d[k + "_inv"] = eye
+        out[name] = d
+    return out
+
+
+def block_precondition(g: jax.Array, a_inv: jax.Array,
+                       g_inv: jax.Array,
+                       axes=("data", "model")) -> jax.Array:
+    """Apply ``blockdiag(A_inv) @ g @ blockdiag(G_inv)``.
+
+    ``g``: (*stack, d_in, d_out); ``a_inv``: (*stack, nb_i, bi, bi);
+    ``g_inv``: (*stack, nb_o, bo, bo) — per-side block sizes read from
+    the inverse shapes (mesh-aligned, :func:`block_size_for`).
+
+    Sharding: with aligned block sizes the (d)->(nb, bs) blockings are
+    shard-local — the gradient's (data, model) layout maps exactly onto
+    (nb_i/'data', nb_o/'model') — and the factor layout puts A blocks
+    on 'data', G blocks on 'model' (dist/sharding.kfac_sharding), so
+    both contractions of the einsum are communication-free: the TPU
+    image of the paper's "each SOI block on its own INV crossbar
+    group". Hints pin that layout (EXPERIMENTS.md §Perf 1.4).
+    """
+    from repro.dist.api import shard_hint
+
+    ain, gout = axes[-2:]
+    bi = a_inv.shape[-1]
+    bo = g_inv.shape[-1]
+    d_in, d_out = g.shape[-2], g.shape[-1]
+    stack = g.shape[:-2]
+    if len(axes) > 2:                   # explicit stack axes (MoE: E)
+        ns = tuple(axes[:-2])[-len(stack):] if stack else ()
+        ns = (None,) * (len(stack) - len(ns)) + ns
+    else:
+        ns = (None,) * len(stack)
+    gp = pad_to_blocks(pad_to_blocks(g, -2, bi), -1, bo)
+    nb_i, nb_o = gp.shape[-2] // bi, gp.shape[-1] // bo
+    gp = gp.reshape(stack + (nb_i, bi, nb_o, bo))
+    gp = shard_hint(gp, *ns, ain, None, gout, None)
+    out = jnp.einsum("...iab,...ibjc,...jcd->...iajd", a_inv, gp, g_inv,
+                     preferred_element_type=jnp.float32)
+    out = shard_hint(out, *ns, ain, None, gout, None)
+    out = out.reshape(stack + (nb_i * bi, nb_o * bo))
+    out = shard_hint(out, *ns, ain, gout)
+    return out[..., :d_in, :d_out]
+
+
+def tikhonov_damping(f: jax.Array, rel: float) -> jax.Array:
+    """Per-block Tikhonov level: ``rel * tr(block)/bs`` (paper Sec. III-A:
+    "Tikhonov regularization ... largely reduces the condition number").
+    A small absolute floor keeps never-touched blocks invertible."""
+    bs = f.shape[-1]
+    tr = jnp.trace(f, axis1=-2, axis2=-1) / bs
+    return rel * tr + 1e-8

@@ -1,0 +1,5 @@
+from repro.data.pipeline import (  # noqa: F401
+    DataCursor,
+    SyntheticTokens,
+    make_global_batch,
+)

@@ -1,0 +1,21 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+RePAST's hardware contributions are (i) the bit-sliced VMM datapath,
+(ii) the O(1) in-array matrix inversion, (iii) the fused MM+INV circuit.
+Their TPU-native counterparts (see each module's docstring for the
+mapping argument):
+
+  bitslice_mm       hi/lo bf16 sliced matmul, fp32 S+A in VMEM
+  neumann_inv       VMEM-resident composed-precision block inverse
+  fused_gram_solve  fused Gram-accumulate + inverse (never HBM the Gram)
+
+Validated in interpret mode on CPU against ``ref.py`` oracles
+(tests/test_kernels.py sweeps shapes/dtypes).
+"""
+
+from repro.kernels.ops import (  # noqa: F401
+    bitslice_mm,
+    fused_gram_inv,
+    neumann_inv,
+    on_tpu,
+)

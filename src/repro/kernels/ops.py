@@ -1,0 +1,44 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On a real TPU backend the kernels compile to Mosaic; everywhere else
+(this CPU container, unit tests) they run under ``interpret=True``,
+which executes the same kernel body per-block in Python — bit-identical
+block decomposition, so CPU validation covers the TPU tiling logic.
+
+``use_pallas_inverses()`` lets the K-FAC optimizer swap its SOI block
+inversion onto the kernel path (TPU production); the default JAX path
+(`core.precision_inv.composed_inverse`) is numerically the same
+algorithm and is what the multi-pod dry-run lowers (Pallas TPU kernels
+cannot lower for the CPU stand-in devices; the FLOP/byte structure XLA
+reports is identical).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.bitslice_mm import bitslice_mm as _bitslice_mm
+from repro.kernels.fused_gram_solve import fused_gram_inv as _fused_gram_inv
+from repro.kernels.neumann_inv import neumann_inv as _neumann_inv
+
+__all__ = ["bitslice_mm", "neumann_inv", "fused_gram_inv", "on_tpu"]
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def bitslice_mm(a: jax.Array, b: jax.Array, **kw) -> jax.Array:
+    kw.setdefault("interpret", not on_tpu())
+    return _bitslice_mm(a, b, **kw)
+
+
+def neumann_inv(a: jax.Array, damping, **kw) -> jax.Array:
+    kw.setdefault("interpret", not on_tpu())
+    return _neumann_inv(a, jnp.asarray(damping), **kw)
+
+
+def fused_gram_inv(a: jax.Array, **kw) -> jax.Array:
+    kw.setdefault("interpret", not on_tpu())
+    return _fused_gram_inv(a, **kw)

@@ -1,0 +1,102 @@
+"""Pure-jnp oracles for the Pallas kernels (allclose targets in tests).
+
+Each oracle implements the *same algorithm* at the same working
+precision as its kernel (hi/lo bf16 partial products, identical
+iteration counts), so kernels must match to float-associativity-level
+tolerance; a second set of fp64-ish references bounds the *algorithmic*
+error (what the composed-precision scheme is supposed to achieve).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantize import (
+    hilo_matmul,
+    hilo_matmul_exact_lhs,
+    split_hi_lo_bf16,
+)
+
+
+def bitslice_mm_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Oracle for kernels.bitslice_mm: identical 3-partial hi/lo product."""
+    return hilo_matmul(a.astype(jnp.float32), b.astype(jnp.float32))
+
+
+def _norm_bound_hi(a_hi: jax.Array) -> jax.Array:
+    n1 = jnp.max(jnp.sum(jnp.abs(a_hi), axis=-2))
+    ninf = jnp.max(jnp.sum(jnp.abs(a_hi), axis=-1))
+    return n1 * ninf
+
+
+def neumann_inv_ref(a: jax.Array, damping: jax.Array, *,
+                    ns_iters: int = 14, taylor_terms: int = 4,
+                    refine_steps: int = 1) -> jax.Array:
+    """Oracle for kernels.neumann_inv on (nb, n, n) blocks."""
+
+    def one(a1, lam):
+        n = a1.shape[-1]
+        eye = jnp.eye(n, dtype=jnp.float32)
+        ad = a1.astype(jnp.float32) + lam * eye
+        a_hi16 = ad.astype(jnp.bfloat16)
+        a_hi = a_hi16.astype(jnp.float32)
+        a_lo16 = (ad - a_hi).astype(jnp.bfloat16)
+        x = a_hi / _norm_bound_hi(a_hi)
+
+        def ns(_, x):
+            return hilo_matmul(
+                x, 2.0 * eye - hilo_matmul_exact_lhs(a_hi16, x))
+
+        x = jax.lax.fori_loop(0, ns_iters, ns, x)
+
+        def taylor(_, carry):
+            m, t = carry
+            t = -hilo_matmul(x, hilo_matmul_exact_lhs(a_lo16, t))
+            return m + t, t
+
+        m, _ = jax.lax.fori_loop(0, max(taylor_terms - 1, 0), taylor,
+                                 (x, x))
+
+        def refine(_, m):
+            return m + hilo_matmul(m, eye - hilo_matmul(ad, m))
+
+        return jax.lax.fori_loop(0, refine_steps, refine, m)
+
+    return jax.vmap(one)(a, jnp.asarray(damping, jnp.float32))
+
+
+def fused_gram_inv_ref(a: jax.Array, *, rel_damp: float = 0.03,
+                       ns_iters: int = 14, taylor_terms: int = 4,
+                       refine_steps: int = 1) -> jax.Array:
+    """Oracle for kernels.fused_gram_inv.
+
+    ``a``: (T, nb, n). Materializes the hi/lo Gram (same partial-product
+    set as the kernel), then applies neumann_inv_ref's iteration.
+    """
+    t = a.shape[0]
+    a32 = a.astype(jnp.float32)
+    a_hi, a_lo = split_hi_lo_bf16(a32)
+
+    def mm_t(x, y):
+        return jnp.einsum("tbn,tbm->bnm", x.astype(jnp.float32),
+                          y.astype(jnp.float32))
+
+    gram = (mm_t(a_hi, a_hi) + mm_t(a_hi, a_lo) + mm_t(a_lo, a_hi)) \
+        / jnp.float32(t)
+    n = gram.shape[-1]
+    lam = rel_damp * jnp.trace(gram, axis1=-2, axis2=-1) / n + 1e-8
+    return neumann_inv_ref(gram, lam, ns_iters=ns_iters,
+                           taylor_terms=taylor_terms,
+                           refine_steps=refine_steps)
+
+
+def exact_gram_inv(a: jax.Array, rel_damp: float = 0.03) -> jax.Array:
+    """fp32 linalg reference for the *algorithmic* accuracy bound."""
+    t = a.shape[0]
+    gram = jnp.einsum("tbn,tbm->bnm", a.astype(jnp.float32),
+                      a.astype(jnp.float32)) / jnp.float32(t)
+    n = gram.shape[-1]
+    lam = rel_damp * jnp.trace(gram, axis1=-2, axis2=-1) / n + 1e-8
+    eye = jnp.eye(n, dtype=jnp.float32)
+    return jnp.linalg.inv(gram + lam[:, None, None] * eye)

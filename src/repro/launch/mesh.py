@@ -1,0 +1,32 @@
+"""Production meshes.
+
+Single pod: (data=16, model=16) — 256 chips (one v5e pod).
+Multi-pod:  (pod=2, data=16, model=16) — 512 chips; ``pod`` is a pure
+data-parallel outer axis so the only cross-pod (DCN) collective is the
+once-per-step gradient all-reduce (optionally int8-compressed,
+``dist/compression.py``).
+
+Functions, not module constants: importing this module must never touch
+jax device state (smoke tests run on 1 CPU device; only
+``launch/dryrun.py`` forces the 512-device host platform).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    auto = (jax.sharding.AxisType.Auto,) * len(axes)
+    return jax.make_mesh(shape, axes, axis_types=auto)
+
+
+def make_dev_mesh(model: int = 1):
+    """Largest (data, model) mesh on the local device pool (CPU tests,
+    single-host runs)."""
+    n = jax.device_count()
+    if n % model:
+        raise ValueError(f"{n} devices not divisible by model={model}")
+    return jax.make_mesh((n // model, model), ("data", "model"))

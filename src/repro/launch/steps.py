@@ -1,0 +1,344 @@
+"""Step builders + abstract input specs for every (arch x shape) cell.
+
+One *cell* = (architecture, input-shape) from the assignment grid. Each
+cell lowers one of:
+
+  train_4k      -> ``train_step``  (fwd + bwd + K-FAC precondition +
+                   update; the SU/INV graphs lower separately as
+                   ``stats_step`` / ``inv_step`` — the paper amortizes
+                   them over ``stats_every`` batches, Fig. 8)
+  prefill_32k   -> ``prefill_step`` (prompt pass writing the KV cache)
+  decode_32k,
+  long_500k     -> ``decode_step``  (one token against a seq_len cache)
+
+Everything here is ShapeDtypeStruct-abstract: no allocation. The same
+builders are jitted concretely by launch/train.py / launch/serve.py and
+the smoke tests (reduced configs).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeCfg
+from repro.core import kfac
+from repro.core.kfac import KFACConfig, KFACState
+from repro.dist import sharding as shard_rules
+from repro.models import lm, whisper
+
+
+class TrainState(NamedTuple):
+    params: Any
+    kfac: KFACState
+
+
+def model_module(cfg: ModelConfig):
+    return whisper if cfg.family == "audio" else lm
+
+
+def kfac_specs(cfg: ModelConfig):
+    return model_module(cfg).kfac_specs(cfg)
+
+
+def enc_len_for(cfg: ModelConfig, seq: int) -> int:
+    """Whisper frame count for a given assigned seq_len (the real model
+    uses 1500 frames; we honor the assigned seq on the decoder side)."""
+    return min(1500, seq)
+
+
+# ---------------------------------------------------------------------------
+# Abstract state
+# ---------------------------------------------------------------------------
+
+def abstract_params(cfg: ModelConfig):
+    mod = model_module(cfg)
+    return jax.eval_shape(lambda: mod.init(cfg, jax.random.PRNGKey(0)))
+
+
+def abstract_train_state(cfg: ModelConfig, kcfg: KFACConfig) -> TrainState:
+    params = abstract_params(cfg)
+    specs = kfac_specs(cfg)
+    kstate = jax.eval_shape(lambda: kfac.init(params, specs, kcfg))
+    return TrainState(params, kstate)
+
+
+def abstract_serve_params(cfg: ModelConfig):
+    """Serving stores weights bf16 (compute dtype); fp32 master weights
+    are a training-only concern."""
+    params = abstract_params(cfg)
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(
+            s.shape, jnp.bfloat16 if s.dtype == jnp.float32 else s.dtype),
+        params)
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, seq_len: int):
+    mod = model_module(cfg)
+    if cfg.family == "audio":
+        return jax.eval_shape(lambda: mod.init_cache(
+            cfg, batch, seq_len, enc_len_for(cfg, seq_len)))
+    return jax.eval_shape(lambda: mod.init_cache(cfg, batch, seq_len))
+
+
+# ---------------------------------------------------------------------------
+# Abstract batches
+# ---------------------------------------------------------------------------
+
+def train_batch_sds(cfg: ModelConfig, batch: int, seq: int) -> Dict:
+    sds = {"tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32)}
+    if cfg.family == "vlm":
+        sds["img_embeds"] = jax.ShapeDtypeStruct(
+            (batch, cfg.n_img_tokens, cfg.vision_dim), jnp.float32)
+        sds["positions"] = jax.ShapeDtypeStruct(
+            (3, batch, seq), jnp.int32)
+    if cfg.family == "audio":
+        sds["enc_embeds"] = jax.ShapeDtypeStruct(
+            (batch, enc_len_for(cfg, seq), cfg.d_model), jnp.float32)
+    return sds
+
+
+def stats_batch_shape(cfg: ModelConfig, shape: ShapeCfg,
+                      kcfg: KFACConfig) -> Tuple[int, int]:
+    """SU-graph subsample (paper: SOI updated every 10 batches on one
+    batch; we additionally subsample tokens to bound tap memory)."""
+    b = min(shape.global_batch, kcfg.stats_batch)
+    s = min(shape.seq_len, kcfg.stats_seq)
+    return b, s
+
+
+# ---------------------------------------------------------------------------
+# Step functions
+# ---------------------------------------------------------------------------
+
+def _split_microbatches(batch, accum: int):
+    """Reshape every batch leaf to a leading (accum, mb, ...) layout.
+
+    Batch dim is axis 0 except M-RoPE ``positions`` (3, B, T). The
+    microbatch dim keeps the (pod, data) sharding (hinted — the reshape
+    is local because accum divides the per-shard row count)."""
+    from repro.dist.api import BATCH_AXES, shard_hint
+
+    out = {}
+    for k, v in batch.items():
+        if k == "positions" and v.ndim == 3:
+            b = v.shape[1]
+            r = v.reshape(3, accum, b // accum, *v.shape[2:]) \
+                .transpose(1, 0, 2, 3)
+            out[k] = shard_hint(r, None, None, BATCH_AXES)
+        else:
+            b = v.shape[0]
+            r = v.reshape(accum, b // accum, *v.shape[1:])
+            out[k] = shard_hint(r, None, BATCH_AXES)
+    return out
+
+
+def make_train_step(cfg: ModelConfig, kcfg: KFACConfig) -> Callable:
+    mod = model_module(cfg)
+    specs = kfac_specs(cfg)
+    accum = max(cfg.train_accum, 1)
+
+    def grads_of(params, batch):
+        from repro.dist.api import shard_like_params
+
+        def loss_of(p):
+            loss, _ = mod.loss_fn(cfg, p, batch)
+            return loss
+
+        loss, grads = jax.value_and_grad(loss_of)(params)
+        # keep stacked dW sharded like the params (dist.api docstring)
+        return loss, shard_like_params(grads)
+
+    def train_step(state: TrainState, batch) -> Tuple[TrainState, dict]:
+        if accum == 1:
+            loss, grads = grads_of(state.params, batch)
+        else:
+            micro = _split_microbatches(batch, accum)
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+
+            def body(carry, mb):
+                g_acc, l_acc = carry
+                loss, grads = grads_of(state.params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32) / accum,
+                    g_acc, grads)
+                return (g_acc, l_acc + loss / accum), None
+
+            (grads, loss), _ = jax.lax.scan(
+                body, (zeros, jnp.zeros((), jnp.float32)), micro)
+        params2, kstate2 = kfac.apply_updates(
+            state.params, grads, state.kfac, specs, kcfg)
+        gnorm = jnp.sqrt(sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree.leaves(grads)))
+        return (TrainState(params2, kstate2),
+                {"loss": loss, "grad_norm": gnorm})
+
+    return train_step
+
+
+def make_sgd_step(cfg: ModelConfig, lr: float = 1e-2,
+                  momentum: float = 0.9) -> Callable:
+    """First-order baseline (the paper's GPU-1st / PipeLayer side)."""
+    mod = model_module(cfg)
+
+    def sgd_step(state, batch):
+        from repro.dist.api import shard_like_params
+
+        params, mom = state
+
+        def loss_of(p):
+            loss, _ = mod.loss_fn(cfg, p, batch)
+            return loss
+
+        loss, grads = jax.value_and_grad(loss_of)(params)
+        grads = shard_like_params(grads)
+        mom2 = jax.tree.map(lambda m, g: momentum * m + g, mom, grads)
+        params2 = jax.tree.map(lambda p, m: p - lr * m, params, mom2)
+        return (params2, mom2), {"loss": loss}
+
+    return sgd_step
+
+
+def make_stats_step(cfg: ModelConfig, kcfg: KFACConfig) -> Callable:
+    """SU graph: factor Grams on a token subsample, EMA'd into state."""
+    mod = model_module(cfg)
+    specs = kfac_specs(cfg)
+
+    def stats_step(state: TrainState, batch) -> Tuple[TrainState, dict]:
+        if cfg.family == "audio":
+            b, t = batch["tokens"].shape
+            te = batch["enc_embeds"].shape[1]
+            taps = {}
+            for name, s in specs.items():
+                n_tok = b * (te if name.startswith("enc/") else t)
+                taps[name] = jnp.zeros(
+                    s.stack + (n_tok, s.d_out), jnp.float32)
+        else:
+            b, t = batch["tokens"].shape
+            taps = mod.build_taps(cfg, specs, b * t)
+
+        def loss_with_taps(p, tp, bt):
+            return mod.loss_fn(cfg, p, bt, taps=tp, collect=True)
+
+        a_grams, g_grams, loss = kfac.stats_grams(
+            loss_with_taps, state.params, taps, batch, specs,
+            kcfg.block_size)
+        kstate2 = kfac.update_factors(state.kfac, a_grams, g_grams, kcfg)
+        return state._replace(kfac=kstate2), {"stats_loss": loss}
+
+    return stats_step
+
+
+def make_inv_step(cfg: ModelConfig, kcfg: KFACConfig) -> Callable:
+    """The paper's technique: composed-precision INV of every SOI block."""
+
+    def inv_step(state: TrainState) -> TrainState:
+        return state._replace(kfac=kfac.refresh_inverses(state.kfac, kcfg))
+
+    return inv_step
+
+
+def make_prefill_step(cfg: ModelConfig) -> Callable:
+    mod = model_module(cfg)
+
+    def prefill_step(params, batch, cache):
+        return mod.prefill(cfg, params, batch, cache)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig) -> Callable:
+    mod = model_module(cfg)
+
+    def decode_step(params, token, cache):
+        return mod.decode_step(cfg, params, token, cache)
+
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# Cell assembly (what dryrun lowers)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Lowerable:
+    """One jit-able program with its abstract args and shardings."""
+
+    name: str
+    fn: Callable
+    args: Tuple[Any, ...]            # ShapeDtypeStruct pytrees
+    in_shardings: Tuple[Any, ...]
+    donate_argnums: Tuple[int, ...] = ()
+
+    def lower(self):
+        jitted = jax.jit(self.fn, in_shardings=self.in_shardings,
+                         donate_argnums=self.donate_argnums)
+        return jitted.lower(*self.args)
+
+
+def cell_skip_reason(cfg: ModelConfig, shape: ShapeCfg) -> Optional[str]:
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return ("full-attention arch: 524k decode is out of contract "
+                "(sub-quadratic archs only; DESIGN.md §4)")
+    if shape.kind == "decode" and not cfg.has_decoder:
+        return "encoder-only arch has no decode step"
+    return None
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeCfg, mesh,
+               kcfg: Optional[KFACConfig] = None,
+               *, include_soi: bool = False) -> list:
+    """Lowerables for one (arch x shape) cell on ``mesh``."""
+    kcfg = kcfg or KFACConfig()
+    out = []
+    if shape.kind == "train":
+        state = abstract_train_state(cfg, kcfg)
+        st_shard = TrainState(
+            shard_rules.param_sharding(state.params, mesh),
+            shard_rules.kfac_sharding(state.kfac, state.params, mesh))
+        batch = train_batch_sds(cfg, shape.global_batch, shape.seq_len)
+        b_shard = shard_rules.batch_sharding(batch, mesh)
+        out.append(Lowerable(
+            "train_step", make_train_step(cfg, kcfg), (state, batch),
+            (st_shard, b_shard), donate_argnums=(0,)))
+        if include_soi:
+            sb, ss = stats_batch_shape(cfg, shape, kcfg)
+            sbatch = train_batch_sds(cfg, sb, ss)
+            out.append(Lowerable(
+                "stats_step", make_stats_step(cfg, kcfg),
+                (state, sbatch),
+                (st_shard, shard_rules.batch_sharding(sbatch, mesh)),
+                donate_argnums=(0,)))
+            out.append(Lowerable(
+                "inv_step", make_inv_step(cfg, kcfg), (state,),
+                (st_shard,), donate_argnums=(0,)))
+        return out
+
+    params = abstract_serve_params(cfg)
+    p_shard = shard_rules.param_sharding(params, mesh)
+    if shape.kind == "prefill":
+        cache = abstract_cache(cfg, shape.global_batch, shape.seq_len)
+        batch = train_batch_sds(cfg, shape.global_batch, shape.seq_len)
+        out.append(Lowerable(
+            "prefill_step", make_prefill_step(cfg),
+            (params, batch, cache),
+            (p_shard, shard_rules.batch_sharding(batch, mesh),
+             shard_rules.cache_sharding(cache, mesh)),
+            donate_argnums=(2,)))
+    else:   # decode: one new token against a seq_len cache
+        cache = abstract_cache(cfg, shape.global_batch, shape.seq_len)
+        token = jax.ShapeDtypeStruct(
+            (shape.global_batch, 1), jnp.int32)
+        t_shard = shard_rules.batch_sharding({"t": token}, mesh)["t"]
+        out.append(Lowerable(
+            "decode_step", make_decode_step(cfg),
+            (params, token, cache),
+            (p_shard, t_shard, shard_rules.cache_sharding(cache, mesh)),
+            donate_argnums=(2,)))
+    return out

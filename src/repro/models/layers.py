@@ -1,0 +1,279 @@
+"""Shared model primitives: norms, RoPE/M-RoPE, GQA attention (full,
+query-chunked, windowed, cached), tapped dense layers for K-FAC stats.
+
+Conventions
+-----------
+* Params are nested dicts of fp32 arrays; compute casts to ``cfg.dtype``.
+* Every K-FAC-factored linear goes through :func:`dense`, which (a) adds
+  the optional gradient *tap* (see core/kfac.py) and (b) records the
+  input-side blocked Gram when stats collection is on.
+* ``Ctx`` threads tap slices + collected stats through a scanned block.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import soi
+from repro.dist.api import BATCH_AXES, DATA, MODEL, shard_hint
+
+
+@dataclasses.dataclass
+class Ctx:
+    """Per-layer forward context (inside scan, taps/stats are the slices
+    of the current layer)."""
+
+    taps: Optional[Dict[str, jax.Array]] = None
+    collect: bool = False
+    stats: Dict[str, jax.Array] = dataclasses.field(default_factory=dict)
+    soi_block: int = 1024
+
+    def sub(self, taps, collect=None):
+        return Ctx(taps=taps, collect=self.collect if collect is None
+                   else collect, stats={}, soi_block=self.soi_block)
+
+
+def cast(x: jax.Array, dtype) -> jax.Array:
+    return x.astype(dtype) if x.dtype != dtype else x
+
+
+def dense(x: jax.Array, w: jax.Array, name: str, ctx: Optional[Ctx] = None,
+          bias: Optional[jax.Array] = None, stack_dims: int = 0,
+          collect_gram: bool = True) -> jax.Array:
+    """Tapped linear: ``y = x @ w (+ b) (+ tap[name])``.
+
+    ``x``: (..., T, d_in). ``stack_dims`` leading dims of ``x`` are kept
+    as factor-stack dims in the collected Gram (e.g. the expert dim of an
+    MoE dispatch buffer); the rest are flattened as tokens.
+    ``collect_gram=False`` skips the A-Gram for linears that share their
+    input factor with a sibling (LinearSpec.share_a_with)."""
+    dt = x.dtype
+    y = jax.lax.dot_general(
+        x, cast(w, dt), (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    if bias is not None:
+        y = y + cast(bias, jnp.float32)
+    if ctx is not None:
+        if ctx.collect and collect_gram:
+            a = x.astype(jnp.float32)
+            a = a.reshape(a.shape[:stack_dims] + (-1, a.shape[-1]))
+            ctx.stats[name] = soi.blocked_gram(a, ctx.soi_block)
+        if ctx.taps is not None and name in ctx.taps:
+            y = y + ctx.taps[name].reshape(y.shape)
+    return y.astype(dt)
+
+
+def dense_stacked(x: jax.Array, w: jax.Array, name: str,
+                  ctx: Optional[Ctx] = None,
+                  collect_gram: bool = True) -> jax.Array:
+    """Batched tapped linear for stacked weights (e.g. MoE experts).
+
+    ``x``: (S..., T, d_in), ``w``: (S..., d_in, d_out) with matching
+    leading stack dims. Grams keep the stack dims."""
+    dt = x.dtype
+    y = jnp.einsum("...td,...df->...tf", x, cast(w, dt),
+                   preferred_element_type=jnp.float32)
+    if ctx is not None:
+        if ctx.collect and collect_gram:
+            ctx.stats[name] = soi.blocked_gram(
+                x.astype(jnp.float32), ctx.soi_block)
+        if ctx.taps is not None and name in ctx.taps:
+            y = y + ctx.taps[name].reshape(y.shape)
+    return y.astype(dt)
+
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * (1.0 + cast(w, jnp.float32))
+    return out.astype(dt)
+
+
+def layer_norm(x: jax.Array, w: jax.Array, b: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps) * cast(w, jnp.float32) \
+        + cast(b, jnp.float32)
+    return out.astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE / M-RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(hd: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float,
+               sections: Tuple[int, ...] = ()) -> jax.Array:
+    """Rotary embedding.
+
+    ``x``: (B, T, H, hd); ``positions``: (B, T) or (3, B, T) for M-RoPE
+    (qwen2-vl), in which case ``sections`` gives the per-stream split of
+    the hd/2 frequency channels (e.g. (16, 24, 24) for hd=128).
+    """
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)            # (hd/2,)
+    if positions.ndim == 3 and sections:
+        # M-RoPE: frequency channels are partitioned across the three
+        # position streams (temporal, height, width).
+        parts = []
+        start = 0
+        for s, sec in zip(range(3), sections):
+            parts.append(positions[s][..., None] *
+                         freqs[start:start + sec])
+            start += sec
+        ang = jnp.concatenate(parts, axis=-1)  # (B, T, hd/2)
+    else:
+        if positions.ndim == 3:
+            positions = positions[0]
+        ang = positions[..., None].astype(jnp.float32) * freqs
+    sin = jnp.sin(ang)[:, :, None, :]
+    cos = jnp.cos(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                          axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+def _gqa_scores_to_out(q, k, v, mask, dt):
+    """Dense-score attention for one (query-block, full-kv) pair.
+
+    q: (B, T, Hkv, G, hd); k/v: (B, S, Hkv, hd); mask: (B?, T, S) bool."""
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("bthgd,bshd->bhgts", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    s = jnp.where(mask[:, None, None, :, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgts,bshd->bthgd", p.astype(dt), v,
+                   preferred_element_type=jnp.float32)
+    return o.astype(dt)
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array,
+              q_pos: jax.Array, kv_pos: jax.Array,
+              causal: bool = True, window: int = 0,
+              chunk: int = 0) -> jax.Array:
+    """GQA attention with optional causality, sliding window, and
+    query-chunking (online softmax over KV chunks would be the Pallas
+    flash path; the XLA path chunks queries which bounds the score
+    materialization at (chunk x S)).
+
+    q: (B, T, H, hd); k/v: (B, S, Hkv, hd);
+    q_pos: (B, T) absolute positions; kv_pos: (B, S).
+    Returns (B, T, H, hd).
+    """
+    B, T, H, hd = q.shape
+    S = k.shape[1]
+    hkv = k.shape[2]
+    g = H // hkv
+    dt = q.dtype
+    qg = q.reshape(B, T, hkv, g, hd)
+
+    def mask_for(qp):    # (B, t) -> (B, t, S)
+        m = jnp.ones((B, qp.shape[1], S), bool)
+        if causal:
+            m &= qp[:, :, None] >= kv_pos[:, None, :]
+        if window:
+            m &= kv_pos[:, None, :] > qp[:, :, None] - window
+        return m
+
+    if chunk and T > chunk:
+        # pad queries to a chunk multiple; pad rows carry q_pos = -1 so
+        # the causal mask blanks them (uniform softmax over -1e30 rows
+        # is finite; padded outputs are sliced away below)
+        pad = (-T) % chunk
+        Tp = T + pad
+        if pad:
+            qg = jnp.pad(qg, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
+            q_pos = jnp.pad(q_pos, ((0, 0), (0, pad)),
+                            constant_values=-1)
+        nch = Tp // chunk
+        qs = qg.reshape(B, nch, chunk, hkv, g, hd).transpose(
+            1, 0, 2, 3, 4, 5)
+        ps = q_pos.reshape(B, nch, chunk).transpose(1, 0, 2)
+
+        def body(_, qc_pc):
+            qc, pc = qc_pc
+            return None, _gqa_scores_to_out(qc, k, v, mask_for(pc), dt)
+
+        # nested remat: don't save per-chunk score/prob tensors for the
+        # backward pass (they are the largest train-time activations);
+        # recompute them — the layer-level remat already recomputes the
+        # forward, so this only changes what the chunk scan *stacks*
+        # (EXPERIMENTS.md §Perf 1.7)
+        body = jax.checkpoint(body)
+        _, outs = jax.lax.scan(body, None, (qs, ps))
+        out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(
+            B, Tp, hkv, g, hd)[:, :T]
+    else:
+        out = _gqa_scores_to_out(qg, k, v, mask_for(q_pos), dt)
+    return out.reshape(B, T, H, hd)
+
+
+def kv_cache_update(cache_k, cache_v, k, v, idx):
+    """Insert k/v (B, t, Hkv, hd) at position idx into (B, S, Hkv, hd)."""
+    ck = jax.lax.dynamic_update_slice(cache_k, k.astype(cache_k.dtype),
+                                      (0, idx, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache_v, v.astype(cache_v.dtype),
+                                      (0, idx, 0, 0))
+    return ck, cv
+
+
+# ---------------------------------------------------------------------------
+# Activations / misc
+# ---------------------------------------------------------------------------
+
+def swiglu(gate: jax.Array, up: jax.Array) -> jax.Array:
+    return jax.nn.silu(gate.astype(jnp.float32)).astype(gate.dtype) * up
+
+
+def gelu(x: jax.Array) -> jax.Array:
+    return jax.nn.gelu(x.astype(jnp.float32)).astype(x.dtype)
+
+
+def causal_conv1d(x: jax.Array, w: jax.Array,
+                  b: Optional[jax.Array] = None,
+                  state: Optional[jax.Array] = None):
+    """Depthwise causal conv along time. x: (B, T, C); w: (C, W).
+
+    If ``state`` (B, W-1, C) is given (decode), it is the left context and
+    the updated state is returned alongside."""
+    W = w.shape[-1]
+    if state is not None:
+        xin = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+        new_state = xin[:, -(W - 1):, :] if W > 1 else state
+    else:
+        xin = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+        new_state = None
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    T = x.shape[1]
+    for i in range(W):
+        out = out + xin[:, i:i + T, :].astype(jnp.float32) \
+            * w[:, i].astype(jnp.float32)
+    if b is not None:
+        out = out + b.astype(jnp.float32)
+    return out.astype(x.dtype), new_state
+
+
+def shard_tokens(x: jax.Array) -> jax.Array:
+    """Hint: batch over (pod, data)."""
+    return shard_hint(x, BATCH_AXES)
+
+
+def shard_acts(x: jax.Array) -> jax.Array:
+    """Hint: (B, T, D) activations — batch over (pod,data), D over model."""
+    return shard_hint(x, BATCH_AXES, None, MODEL)

@@ -1,0 +1,562 @@
+"""Generic LM-family model: dense / MoE / SSM / hybrid / VLM backbones.
+
+One scanned-layer decoder with per-family mixer blocks:
+
+  dense, vlm : global attention + SwiGLU MLP
+  moe        : global attention + top-k MoE FFN
+  ssm        : Mamba-1 mixer only (no MLP, d_ff = 0)
+  hybrid     : RecurrentGemma pattern units (rec, rec, local-attn), each
+               sub-layer followed by a SwiGLU MLP
+
+All layers live under ``jax.lax.scan`` (uniform) or a scanned
+pattern-unit + explicit tail (hybrid) so HLO size is one-layer-sized.
+Backward memory is bounded by per-layer remat (``cfg.remat``).
+
+K-FAC integration: every factored linear is a ``layers.dense`` /
+``dense_stacked`` call with a path-accurate name; taps enter via scan
+xs, activation Grams leave via scan ys (see core/kfac.py).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.soi import LinearSpec
+from repro.dist.api import BATCH_AXES, MODEL, shard_hint
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (
+    Ctx,
+    apply_rope,
+    attention,
+    cast,
+    dense,
+    kv_cache_update,
+    rms_norm,
+    shard_acts,
+    swiglu,
+)
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _init_attn(cfg, key) -> Dict:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    s = d ** -0.5
+    p = {
+        "wq": jax.random.normal(ks[0], (d, h * hd), jnp.float32) * s,
+        "wk": jax.random.normal(ks[1], (d, kv * hd), jnp.float32) * s,
+        "wv": jax.random.normal(ks[2], (d, kv * hd), jnp.float32) * s,
+        "wo": jax.random.normal(ks[3], (h * hd, d), jnp.float32)
+        * (h * hd) ** -0.5,
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), jnp.float32)
+        p["bk"] = jnp.zeros((kv * hd,), jnp.float32)
+        p["bv"] = jnp.zeros((kv * hd,), jnp.float32)
+    return p
+
+
+def _init_mlp(cfg, key) -> Dict:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "wg": jax.random.normal(ks[0], (d, f), jnp.float32) * d ** -0.5,
+        "wu": jax.random.normal(ks[1], (d, f), jnp.float32) * d ** -0.5,
+        "wd": jax.random.normal(ks[2], (f, d), jnp.float32) * f ** -0.5,
+    }
+
+
+def _init_layer(cfg, kind: str, key) -> Dict:
+    d = cfg.d_model
+    ks = jax.random.split(key, 3)
+    p: Dict[str, Any] = {"ln1": jnp.zeros((d,), jnp.float32)}
+    if kind in ("attn", "local"):
+        p["attn"] = _init_attn(cfg, ks[0])
+        p["ln2"] = jnp.zeros((d,), jnp.float32)
+        p["mlp"] = _init_mlp(cfg, ks[1])
+    elif kind == "moe":
+        p["attn"] = _init_attn(cfg, ks[0])
+        p["ln2"] = jnp.zeros((d,), jnp.float32)
+        p["moe"] = moe_mod.init_moe(cfg, ks[1])
+    elif kind == "mamba":
+        p["mamba"] = ssm_mod.init_mamba(cfg, ks[0])
+    elif kind == "rec":
+        p["rec"] = rglru_mod.init_rglru(cfg, ks[0])
+        p["ln2"] = jnp.zeros((d,), jnp.float32)
+        p["mlp"] = _init_mlp(cfg, ks[1])
+    else:
+        raise ValueError(kind)
+    return p
+
+
+def layer_plan(cfg) -> Tuple[str, ...]:
+    """Per-layer kind sequence."""
+    if cfg.family in ("dense", "vlm"):
+        return ("attn",) * cfg.n_layers
+    if cfg.family == "moe":
+        return ("moe",) * cfg.n_layers
+    if cfg.family == "ssm":
+        return ("mamba",) * cfg.n_layers
+    if cfg.family == "hybrid":
+        return tuple(cfg.pattern[i % len(cfg.pattern)]
+                     for i in range(cfg.n_layers))
+    raise ValueError(cfg.family)
+
+
+def _hybrid_split(cfg) -> Tuple[int, Tuple[str, ...]]:
+    unit = tuple(cfg.pattern)
+    n_units = cfg.n_layers // len(unit)
+    tail = tuple(unit[: cfg.n_layers % len(unit)])
+    return n_units, tail
+
+
+def init(cfg, key) -> Dict:
+    ks = jax.random.split(key, 8)
+    d, v = cfg.d_model, cfg.vocab
+    params: Dict[str, Any] = {
+        "embed": jax.random.normal(ks[0], (v, d), jnp.float32) * 0.02,
+        "final_norm": jnp.zeros((d,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = jax.random.normal(
+            ks[1], (d, v), jnp.float32) * d ** -0.5
+    if cfg.family == "vlm" and cfg.vision_dim:
+        params["img_proj"] = jax.random.normal(
+            ks[2], (cfg.vision_dim, d), jnp.float32) * cfg.vision_dim ** -0.5
+
+    if cfg.family == "hybrid":
+        n_units, tail = _hybrid_split(cfg)
+        unit_keys = jax.random.split(ks[3], n_units)
+
+        def one_unit(k):
+            kk = jax.random.split(k, len(cfg.pattern))
+            return {f"sub{i}": _init_layer(cfg, kind, kk[i])
+                    for i, kind in enumerate(cfg.pattern)}
+
+        params["units"] = jax.vmap(one_unit)(unit_keys)
+        tk = jax.random.split(ks[4], max(len(tail), 1))
+        params["tail"] = {f"sub{i}": _init_layer(cfg, kind, tk[i])
+                          for i, kind in enumerate(tail)}
+    else:
+        kind = layer_plan(cfg)[0]
+        layer_keys = jax.random.split(ks[3], cfg.n_layers)
+        params["layers"] = jax.vmap(
+            lambda k: _init_layer(cfg, kind, k))(layer_keys)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+def _attn_block(cfg, p, x, positions, ctx, prefix, *, window=0,
+                cache=None, idx=None, mrope=False):
+    """Pre-norm attention sub-layer. cache: dict(k, v, pos) slices for
+    this layer or None. Returns (x + attn_out, new_cache)."""
+    B, T, D = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    xin = rms_norm(x, p["ln1"], cfg.norm_eps)
+    q = dense(xin, p["attn"]["wq"], f"{prefix}/attn/wq", ctx,
+              bias=p["attn"].get("bq"))
+    k = dense(xin, p["attn"]["wk"], f"{prefix}/attn/wk", ctx,
+              bias=p["attn"].get("bk"), collect_gram=False)
+    v = dense(xin, p["attn"]["wv"], f"{prefix}/attn/wv", ctx,
+              bias=p["attn"].get("bv"), collect_gram=False)
+    q = q.reshape(B, T, h, hd)
+    k = k.reshape(B, T, kv, hd)
+    v = v.reshape(B, T, kv, hd)
+    sections = cfg.mrope_sections if mrope else ()
+    q = apply_rope(q, positions, cfg.rope_theta, sections)
+    k = apply_rope(k, positions, cfg.rope_theta, sections)
+    q = shard_hint(q, BATCH_AXES, None, MODEL, None)
+    k = shard_hint(k, BATCH_AXES, None, MODEL, None)
+
+    q_pos = positions[0] if positions.ndim == 3 else positions
+    new_cache = None
+    if cache is not None and T > 1 and window and T > cache["k"].shape[1]:
+        # Windowed prefill longer than the ring: attend in-sequence, then
+        # store only the last S tokens rolled to their ring slots
+        # (invariant: pos p lives at slot p % S).
+        S = cache["k"].shape[1]
+        k_all, v_all, kv_pos = k, v, q_pos
+        shift = (idx + T) % S
+        ck = jnp.roll(k[:, -S:].astype(cache["k"].dtype), shift, axis=1)
+        cv = jnp.roll(v[:, -S:].astype(cache["v"].dtype), shift, axis=1)
+        cpos = jnp.roll(q_pos[:, -S:].astype(jnp.int32), shift, axis=1)
+        new_cache = {"k": ck, "v": cv, "pos": cpos}
+    elif cache is not None:
+        # write this step's k/v at slot idx (ring-buffered for windows)
+        S = cache["k"].shape[1]
+        slot = idx % S if window else idx
+        ck, cv = kv_cache_update(cache["k"], cache["v"], k, v, slot)
+        cpos = jax.lax.dynamic_update_slice(
+            cache["pos"], q_pos.astype(jnp.int32), (0, slot))
+        kv_pos = cpos
+        k_all, v_all = ck.astype(q.dtype), cv.astype(q.dtype)
+        new_cache = {"k": ck, "v": cv, "pos": cpos}
+    else:
+        k_all, v_all = k, v
+        kv_pos = q_pos
+    out = attention(q, k_all, v_all, q_pos, kv_pos, causal=True,
+                    window=window,
+                    chunk=cfg.attn_chunk if T > cfg.attn_chunk else 0)
+    out = out.reshape(B, T, h * hd)
+    out = dense(out, p["attn"]["wo"], f"{prefix}/attn/wo", ctx)
+    return x + shard_acts(out), new_cache
+
+
+def _mlp_block(cfg, p, x, ctx, prefix):
+    xin = rms_norm(x, p["ln2"], cfg.norm_eps)
+    g = dense(xin, p["mlp"]["wg"], f"{prefix}/mlp/wg", ctx)
+    u = dense(xin, p["mlp"]["wu"], f"{prefix}/mlp/wu", ctx,
+              collect_gram=False)
+    hidden = swiglu(g, u)
+    hidden = shard_hint(hidden, BATCH_AXES, None, MODEL)
+    out = dense(hidden, p["mlp"]["wd"], f"{prefix}/mlp/wd", ctx)
+    return x + shard_acts(out)
+
+
+def _layer_apply(cfg, kind, p, x, positions, ctx, prefix, cache=None,
+                 idx=None):
+    """One decoder layer of the given kind. Returns (x, new_cache)."""
+    if kind in ("attn", "local"):
+        window = cfg.window if kind == "local" else 0
+        x, nc = _attn_block(cfg, p, x, positions, ctx, prefix,
+                            window=window, cache=cache, idx=idx,
+                            mrope=(cfg.family == "vlm"))
+        x = _mlp_block(cfg, p, x, ctx, prefix)
+        return x, nc
+    if kind == "moe":
+        x, nc = _attn_block(cfg, p, x, positions, ctx, prefix,
+                            cache=cache, idx=idx)
+        xin = rms_norm(x, p["ln2"], cfg.norm_eps)
+        x = x + moe_mod.moe_ffn(cfg, p["moe"], xin, ctx, f"{prefix}/moe")
+        return x, nc
+    if kind == "mamba":
+        xin = rms_norm(x, p["ln1"], cfg.norm_eps)
+        y, nstate = ssm_mod.mamba_mixer(cfg, p["mamba"], xin, ctx,
+                                        f"{prefix}/mamba", state=cache)
+        return x + y, nstate
+    if kind == "rec":
+        xin = rms_norm(x, p["ln1"], cfg.norm_eps)
+        y, nstate = rglru_mod.rglru_mixer(cfg, p["rec"], xin, ctx,
+                                          f"{prefix}/rec", state=cache)
+        x = x + y
+        x = _mlp_block(cfg, p, x, ctx, prefix)
+        return x, nstate
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _embed(cfg, params, batch, positions):
+    tokens = batch["tokens"]
+    dt = jnp.dtype(cfg.dtype)
+    x = cast(params["embed"], dt)[tokens]
+    if cfg.family == "vlm" and "img_embeds" in batch:
+        # stubbed vision frontend (assignment): precomputed patch embeds
+        # projected into the first n_img token slots
+        img = jax.lax.dot_general(
+            batch["img_embeds"].astype(dt), cast(params["img_proj"], dt),
+            (((2,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        ).astype(dt)
+        n_img = img.shape[1]
+        T = x.shape[1]
+        img_pad = jnp.pad(img, ((0, 0), (0, T - n_img), (0, 0)))
+        x = x + img_pad
+    return shard_acts(x)
+
+
+def _logits(cfg, params, x):
+    dt = x.dtype
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    # pad vocab to a shardable multiple of 128 (standard practice: an
+    # odd vocab like whisper's 51865 otherwise forces replicated
+    # logits, the largest activation in the model); padded columns are
+    # masked to -1e30 so loss/argmax semantics are unchanged
+    v = head.shape[-1]
+    vpad = (-v) % 128
+    if vpad:
+        head = jnp.pad(head, ((0, 0), (0, vpad)))
+    logits = jax.lax.dot_general(
+        x, cast(head, dt), (((2,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    if vpad:
+        mask = jnp.where(jnp.arange(v + vpad) < v, 0.0, -1e30)
+        logits = logits + mask
+    return shard_hint(logits, BATCH_AXES, None, MODEL)
+
+
+def _scan_layers(cfg, params, x, positions, taps, collect, cache, idx,
+                 train):
+    """Run all layers; returns (x, stats, new_cache)."""
+    stats_out: Dict[str, jax.Array] = {}
+
+    def run_seq(prefix, stacked, n, x, cache_tree):
+        """Scan over ``n`` stacked layers of uniform kind."""
+        kind = layer_plan(cfg)[0]
+
+        def body(xcur, xs):
+            p_l, taps_l, cache_l = xs
+            ctx = Ctx(taps=taps_l or None, collect=collect,
+                      soi_block=cfg.soi_block)
+            xnew, ncache = _layer_apply(cfg, kind, p_l, xcur, positions,
+                                        ctx, prefix, cache=cache_l, idx=idx)
+            if cache_l is None:
+                ncache = None     # train: don't stack states as ys
+            return xnew, (ctx.stats, ncache)
+
+        fn = body
+        if train and cfg.remat:
+            fn = jax.checkpoint(body)
+        taps_xs = {k: v for k, v in (taps or {}).items()
+                   if k.startswith(prefix + "/")}
+        x, (stats, ncache) = jax.lax.scan(
+            fn, x, (stacked, taps_xs, cache_tree))
+        stats_out.update(stats)
+        return x, ncache
+
+    new_cache = None
+    if cfg.family == "hybrid":
+        n_units, tail = _hybrid_split(cfg)
+        sub_caches = (cache or {}).get("units") if cache else None
+        tail_caches = (cache or {}).get("tail") if cache else None
+
+        def body(xcur, xs):
+            p_u, taps_u, cache_u = xs
+            ncaches = {}
+            stats = {}
+            for i, kind in enumerate(cfg.pattern):
+                ctx = Ctx(taps=taps_u or None, collect=collect,
+                          soi_block=cfg.soi_block)
+                c_i = cache_u.get(f"sub{i}") if cache_u else None
+                xcur, nc = _layer_apply(cfg, kind, p_u[f"sub{i}"], xcur,
+                                        positions, ctx, f"units/sub{i}",
+                                        cache=c_i, idx=idx)
+                stats.update(ctx.stats)
+                if nc is not None:
+                    ncaches[f"sub{i}"] = nc
+            return xcur, (stats, ncaches)
+
+        fn = jax.checkpoint(body) if (train and cfg.remat) else body
+        taps_xs = {k: v for k, v in (taps or {}).items()
+                   if k.startswith("units/")}
+        x, (stats, ncache_units) = jax.lax.scan(
+            fn, x, (params["units"], taps_xs, sub_caches))
+        stats_out.update(stats)
+
+        ncache_tail = {}
+        for i, kind in enumerate(tail):
+            ctx = Ctx(taps=taps or None, collect=collect,
+                      soi_block=cfg.soi_block)
+            c_i = tail_caches.get(f"sub{i}") if tail_caches else None
+            x, nc = _layer_apply(cfg, kind, params["tail"][f"sub{i}"], x,
+                                 positions, ctx, f"tail/sub{i}",
+                                 cache=c_i, idx=idx)
+            stats_out.update(ctx.stats)
+            if nc is not None:
+                ncache_tail[f"sub{i}"] = nc
+        if cache is not None:
+            new_cache = {"units": ncache_units, "tail": ncache_tail}
+    else:
+        layer_cache = cache.get("layers") if cache else None
+        x, ncache = run_seq("layers", params["layers"], cfg.n_layers, x,
+                            layer_cache)
+        if cache is not None:
+            new_cache = {"layers": ncache}
+    return x, stats_out, new_cache
+
+
+def forward(cfg, params, batch, taps=None, collect=False, cache=None,
+            train=False, last_only=False):
+    """Returns (logits, stats, new_cache). ``last_only`` computes the
+    vocab projection for the final position only (prefill: the other
+    T-1 logits are dead code and the vocab matmul dominates prefill
+    FLOPs for small models — EXPERIMENTS.md §Perf)."""
+    idx = cache["idx"] if cache is not None else None
+    if "positions" in batch:
+        positions = batch["positions"]
+    else:
+        B, T = batch["tokens"].shape
+        base = jnp.arange(T, dtype=jnp.int32)[None, :]
+        if idx is not None:
+            base = base + idx
+        positions = jnp.broadcast_to(base, (B, T))
+
+    x = _embed(cfg, params, batch, positions)
+    x, stats, new_cache = _scan_layers(
+        cfg, params, x, positions, taps, collect, cache, idx, train)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if last_only:
+        x = x[:, -1:]
+    logits = _logits(cfg, params, x)
+    if new_cache is not None:
+        new_cache["idx"] = idx + batch["tokens"].shape[1]
+    return logits, stats, new_cache
+
+
+def loss_fn(cfg, params, batch, taps=None, collect=False):
+    """Next-token cross-entropy. Returns (loss, stats)."""
+    logits, stats, _ = forward(cfg, params, batch, taps=taps,
+                               collect=collect, train=True)
+    labels = batch["tokens"][:, 1:]
+    lg = logits[:, :-1].astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(lg, axis=-1)
+    gold = jnp.take_along_axis(lg, labels[..., None], axis=-1)[..., 0]
+    mask = batch.get("mask")
+    nll = logz - gold
+    if mask is not None:
+        m = mask[:, 1:].astype(jnp.float32)
+        loss = jnp.sum(nll * m) / jnp.maximum(jnp.sum(m), 1.0)
+    else:
+        loss = jnp.mean(nll)
+    return loss, stats
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch: int, seq_len: int, dtype=jnp.bfloat16) -> Dict:
+    kv, hd = cfg.n_kv_heads, cfg.hd
+
+    def attn_cache(S):
+        # unwritten slots carry a far-future position so the causal mask
+        # excludes them
+        return {
+            "k": jnp.zeros((batch, S, kv, hd), dtype),
+            "v": jnp.zeros((batch, S, kv, hd), dtype),
+            "pos": jnp.full((batch, S), 2 ** 30, jnp.int32),
+        }
+
+    if cfg.family == "hybrid":
+        n_units, tail = _hybrid_split(cfg)
+        S = min(seq_len, cfg.window or seq_len)
+
+        def unit_cache(_):
+            return {f"sub{i}":
+                    attn_cache(S) if kind in ("attn", "local")
+                    else rglru_mod.init_rglru_state(cfg, batch)
+                    for i, kind in enumerate(cfg.pattern)}
+
+        units = jax.vmap(unit_cache)(jnp.arange(n_units))
+        tail_c = {f"sub{i}":
+                  attn_cache(S) if kind in ("attn", "local")
+                  else rglru_mod.init_rglru_state(cfg, batch)
+                  for i, kind in enumerate(tail)}
+        return {"units": units, "tail": tail_c,
+                "idx": jnp.zeros((), jnp.int32)}
+    if cfg.family == "ssm":
+        def one(_):
+            return ssm_mod.init_mamba_state(cfg, batch)
+        layers = jax.vmap(one)(jnp.arange(cfg.n_layers))
+        return {"layers": layers, "idx": jnp.zeros((), jnp.int32)}
+
+    def one(_):
+        return attn_cache(seq_len)
+    layers = jax.vmap(one)(jnp.arange(cfg.n_layers))
+    return {"layers": layers, "idx": jnp.zeros((), jnp.int32)}
+
+
+def prefill(cfg, params, batch, cache):
+    """Process a prompt; returns (last-token logits, cache)."""
+    logits, _, cache = forward(cfg, params, batch, cache=cache,
+                               last_only=True)
+    return logits[:, -1], cache
+
+
+def decode_step(cfg, params, token, cache):
+    """One decode step. ``token``: (B, 1) int32."""
+    logits, _, cache = forward(cfg, params, {"tokens": token}, cache=cache)
+    return logits[:, -1], cache
+
+
+# ---------------------------------------------------------------------------
+# K-FAC registry
+# ---------------------------------------------------------------------------
+
+def kfac_specs(cfg) -> Dict[str, LinearSpec]:
+    """All factored linears with path-accurate names (DESIGN.md §4)."""
+    d, f = cfg.d_model, cfg.d_ff
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    specs: Dict[str, LinearSpec] = {}
+
+    def attn_mlp(prefix, stack, with_mlp=True):
+        specs[f"{prefix}/attn/wq"] = LinearSpec(d, h * hd, stack)
+        specs[f"{prefix}/attn/wk"] = LinearSpec(
+            d, kv * hd, stack, share_a_with=f"{prefix}/attn/wq")
+        specs[f"{prefix}/attn/wv"] = LinearSpec(
+            d, kv * hd, stack, share_a_with=f"{prefix}/attn/wq")
+        specs[f"{prefix}/attn/wo"] = LinearSpec(h * hd, d, stack)
+        if with_mlp:
+            mlp(prefix, stack)
+
+    def mlp(prefix, stack):
+        specs[f"{prefix}/mlp/wg"] = LinearSpec(d, f, stack)
+        specs[f"{prefix}/mlp/wu"] = LinearSpec(
+            d, f, stack, share_a_with=f"{prefix}/mlp/wg")
+        specs[f"{prefix}/mlp/wd"] = LinearSpec(f, d, stack)
+
+    if cfg.family in ("dense", "vlm"):
+        attn_mlp("layers", (cfg.n_layers,))
+    elif cfg.family == "moe":
+        L = cfg.n_layers
+        attn_mlp("layers", (L,), with_mlp=False)
+        e = cfg.n_experts
+        specs["layers/moe/wg"] = LinearSpec(d, f, (L, e), cap_tokens=True)
+        specs["layers/moe/wu"] = LinearSpec(
+            d, f, (L, e), share_a_with="layers/moe/wg", cap_tokens=True)
+        specs["layers/moe/wd"] = LinearSpec(f, d, (L, e), cap_tokens=True)
+    elif cfg.family == "ssm":
+        L = cfg.n_layers
+        di, n, dr = cfg.d_inner, cfg.ssm_state, cfg.dt_rank_
+        specs["layers/mamba/in_proj"] = LinearSpec(d, 2 * di, (L,))
+        specs["layers/mamba/x_proj"] = LinearSpec(di, dr + 2 * n, (L,))
+        specs["layers/mamba/dt_proj"] = LinearSpec(dr, di, (L,))
+        specs["layers/mamba/out_proj"] = LinearSpec(di, d, (L,))
+    elif cfg.family == "hybrid":
+        n_units, tail = _hybrid_split(cfg)
+
+        def rec_specs(prefix, stack):
+            lw = cfg.lru_width_
+            specs[f"{prefix}/rec/in_x"] = LinearSpec(d, lw, stack)
+            specs[f"{prefix}/rec/in_gate"] = LinearSpec(
+                d, lw, stack, share_a_with=f"{prefix}/rec/in_x")
+            specs[f"{prefix}/rec/w_a"] = LinearSpec(lw, lw, stack)
+            specs[f"{prefix}/rec/w_x"] = LinearSpec(
+                lw, lw, stack, share_a_with=f"{prefix}/rec/w_a")
+            specs[f"{prefix}/rec/out"] = LinearSpec(lw, d, stack)
+            mlp(prefix, stack)
+
+        for i, kind in enumerate(cfg.pattern):
+            pfx = f"units/sub{i}"
+            if kind in ("attn", "local"):
+                attn_mlp(pfx, (n_units,))
+            else:
+                rec_specs(pfx, (n_units,))
+        for i, kind in enumerate(tail):
+            pfx = f"tail/sub{i}"
+            if kind in ("attn", "local"):
+                attn_mlp(pfx, ())
+            else:
+                rec_specs(pfx, ())
+    return specs
+
+
+def build_taps(cfg, specs: Dict[str, LinearSpec], n_tokens: int) -> Dict:
+    """Zero taps sized for a stats pass over ``n_tokens`` tokens."""
+    out = {}
+    for name, s in specs.items():
+        t = moe_mod.capacity(cfg, n_tokens) if s.cap_tokens else n_tokens
+        out[name] = jnp.zeros(s.stack + (t, s.d_out), jnp.float32)
+    return out

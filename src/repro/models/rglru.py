@@ -1,0 +1,97 @@
+"""RG-LRU recurrent mixer (RecurrentGemma / Griffin).
+
+Real-gated linear recurrent unit:
+    r_t = sigmoid(W_a x_t)          (recurrence gate)
+    i_t = sigmoid(W_x x_t)          (input gate)
+    a_t = exp(-c * softplus(Lambda) * r_t)          (per-channel decay)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training/prefill via associative scan; decode via the single step. The
+mixer block is conv1d(4) + RG-LRU on one branch, GeLU gate on the other
+(Griffin recurrent block). Elementwise Lambda takes the first-order path;
+W_a/W_x and the in/out projections are K-FAC-factored.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.api import BATCH_AXES, MODEL, shard_hint
+from repro.models.layers import Ctx, causal_conv1d, dense, gelu
+
+_C = 8.0    # Griffin's fixed decay sharpness
+
+
+def init_rglru(cfg, key) -> Dict:
+    d, lw = cfg.d_model, cfg.lru_width_
+    ks = jax.random.split(key, 6)
+    s = d ** -0.5
+    sl = lw ** -0.5
+    return {
+        "in_x": jax.random.normal(ks[0], (d, lw), jnp.float32) * s,
+        "in_gate": jax.random.normal(ks[1], (d, lw), jnp.float32) * s,
+        "conv_w": jax.random.normal(ks[2], (lw, cfg.ssm_conv),
+                                    jnp.float32) * 0.1,
+        "conv_b": jnp.zeros((lw,), jnp.float32),
+        "w_a": jax.random.normal(ks[3], (lw, lw), jnp.float32) * sl,
+        "w_x": jax.random.normal(ks[4], (lw, lw), jnp.float32) * sl,
+        "lam": jnp.log(jnp.expm1(jnp.linspace(0.9, 4.0, lw))
+                       .astype(jnp.float32)),   # softplus^-1 spread
+        "out": jax.random.normal(ks[5], (lw, d), jnp.float32) * sl,
+    }
+
+
+def rglru_mixer(cfg, p: Dict, x: jax.Array, ctx: Optional[Ctx],
+                prefix: str,
+                state: Optional[Tuple[jax.Array, jax.Array]] = None):
+    """x: (B, T, D); state: (h (B, lw), conv (B, W-1, lw)). Returns
+    (y (B, T, D), new_state)."""
+    B, T, D = x.shape
+
+    xb = dense(x, p["in_x"], f"{prefix}/in_x", ctx)
+    gb = gelu(dense(x, p["in_gate"], f"{prefix}/in_gate", ctx,
+                    collect_gram=False))
+    xb = shard_hint(xb, BATCH_AXES, None, MODEL)
+
+    h0 = conv0 = None
+    if state is not None:
+        h0, conv0 = state
+    xc, conv1 = causal_conv1d(xb, p["conv_w"], p["conv_b"], state=conv0)
+
+    r = jax.nn.sigmoid(dense(xc, p["w_a"], f"{prefix}/w_a", ctx)
+                       .astype(jnp.float32))
+    i = jax.nn.sigmoid(dense(xc, p["w_x"], f"{prefix}/w_x", ctx,
+                             collect_gram=False)
+                       .astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)                                    # (B, T, lw)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) \
+        * i * xc.astype(jnp.float32)
+
+    if T == 1 and h0 is not None:
+        h = a[:, 0] * h0 + gated[:, 0]
+        hs = h[:, None]
+        new_h = h
+    else:
+        def comb(l, r_):
+            al, bl = l
+            ar, br = r_
+            return al * ar, bl * ar + br
+
+        if h0 is not None:
+            gated = gated.at[:, 0].add(a[:, 0] * h0)
+        _, hs = jax.lax.associative_scan(comb, (a, gated), axis=1)
+        new_h = hs[:, -1]
+
+    y = (hs.astype(x.dtype) * gb)
+    out = dense(y, p["out"], f"{prefix}/out", ctx)
+    return out, (new_h, conv1)
+
+
+def init_rglru_state(cfg, batch: int, dtype=jnp.float32):
+    lw, w = cfg.lru_width_, cfg.ssm_conv
+    return (jnp.zeros((batch, lw), dtype),
+            jnp.zeros((batch, w - 1, lw), dtype))

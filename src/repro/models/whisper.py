@@ -1,0 +1,354 @@
+"""Whisper-style encoder-decoder backbone (whisper-tiny arch).
+
+The conv/mel frontend is a STUB per the assignment: ``input_specs``
+provides precomputed frame embeddings (B, T_frames, D). The backbone is
+faithful: pre-LN transformer, bidirectional encoder, causal decoder with
+cross-attention, GELU MLPs, LayerNorm with bias, sinusoidal positions,
+tied embedding/output head.
+
+Shape-cell semantics (DESIGN.md §4): ``train`` = teacher-forced CE over
+T decoder tokens with T encoder frames; ``prefill`` = encode T frames +
+short decoder prompt; ``decode`` = one decoder token against cached
+encoder output of T frames and a T-slot self-attention cache.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.soi import LinearSpec
+from repro.dist.api import BATCH_AXES, MODEL, shard_hint
+from repro.models.layers import (
+    Ctx,
+    attention,
+    cast,
+    dense,
+    gelu,
+    kv_cache_update,
+    layer_norm,
+    shard_acts,
+)
+
+
+def _sinusoid(positions: jax.Array, d: int) -> jax.Array:
+    """(B, T) -> (B, T, d) sinusoidal embedding."""
+    half = d // 2
+    freqs = jnp.exp(-jnp.log(10000.0) * jnp.arange(half) / (half - 1))
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _init_ln(d, key=None):
+    return {"w": jnp.ones((d,), jnp.float32),
+            "b": jnp.zeros((d,), jnp.float32)}
+
+
+def _init_attn(cfg, key):
+    d, h, hd = cfg.d_model, cfg.n_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    s = d ** -0.5
+    return {
+        "wq": jax.random.normal(ks[0], (d, h * hd), jnp.float32) * s,
+        "wk": jax.random.normal(ks[1], (d, h * hd), jnp.float32) * s,
+        "wv": jax.random.normal(ks[2], (d, h * hd), jnp.float32) * s,
+        "wo": jax.random.normal(ks[3], (h * hd, d), jnp.float32)
+        * (h * hd) ** -0.5,
+        "bq": jnp.zeros((h * hd,), jnp.float32),
+        "bv": jnp.zeros((h * hd,), jnp.float32),
+        "bo": jnp.zeros((d,), jnp.float32),
+    }
+
+
+def _init_mlp(cfg, key):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 2)
+    return {
+        "w1": jax.random.normal(ks[0], (d, f), jnp.float32) * d ** -0.5,
+        "b1": jnp.zeros((f,), jnp.float32),
+        "w2": jax.random.normal(ks[1], (f, d), jnp.float32) * f ** -0.5,
+        "b2": jnp.zeros((d,), jnp.float32),
+    }
+
+
+def _init_enc_layer(cfg, key):
+    ks = jax.random.split(key, 2)
+    return {"ln1": _init_ln(cfg.d_model), "attn": _init_attn(cfg, ks[0]),
+            "ln2": _init_ln(cfg.d_model), "mlp": _init_mlp(cfg, ks[1])}
+
+
+def _init_dec_layer(cfg, key):
+    ks = jax.random.split(key, 3)
+    return {"ln1": _init_ln(cfg.d_model), "attn": _init_attn(cfg, ks[0]),
+            "lnx": _init_ln(cfg.d_model), "cross": _init_attn(cfg, ks[1]),
+            "ln2": _init_ln(cfg.d_model), "mlp": _init_mlp(cfg, ks[2])}
+
+
+def init(cfg, key) -> Dict:
+    ks = jax.random.split(key, 4)
+    enc_keys = jax.random.split(ks[0], cfg.n_enc_layers)
+    dec_keys = jax.random.split(ks[1], cfg.n_dec_layers)
+    return {
+        "embed": jax.random.normal(ks[2], (cfg.vocab, cfg.d_model),
+                                   jnp.float32) * 0.02,
+        "enc": jax.vmap(lambda k: _init_enc_layer(cfg, k))(enc_keys),
+        "dec": jax.vmap(lambda k: _init_dec_layer(cfg, k))(dec_keys),
+        "enc_ln_f": _init_ln(cfg.d_model),
+        "dec_ln_f": _init_ln(cfg.d_model),
+    }
+
+
+def _mha(cfg, p, xq, xkv, ctx, prefix, causal, q_pos, kv_pos,
+         cache=None, idx=None, shared_kv=None):
+    """One attention with optional cache / precomputed kv."""
+    B, T, D = xq.shape
+    h, hd = cfg.n_heads, cfg.hd
+    if xkv is None:
+        xkv = xq
+    q = dense(xq, p["wq"], f"{prefix}/wq", ctx, bias=p["bq"])
+    if shared_kv is not None:
+        k, v = shared_kv
+    else:
+        k = dense(xkv, p["wk"], f"{prefix}/wk", ctx, collect_gram=False)
+        v = dense(xkv, p["wv"], f"{prefix}/wv", ctx, bias=p["bv"],
+                  collect_gram=False)
+        k = k.reshape(B, -1, h, hd)
+        v = v.reshape(B, -1, h, hd)
+    q = q.reshape(B, T, h, hd)
+    new_cache = None
+    if cache is not None:
+        ck, cv = kv_cache_update(cache["k"], cache["v"], k, v, idx)
+        cpos = jax.lax.dynamic_update_slice(
+            cache["pos"], q_pos.astype(jnp.int32), (0, idx))
+        k, v, kv_pos = ck.astype(q.dtype), cv.astype(q.dtype), cpos
+        new_cache = {"k": ck, "v": cv, "pos": cpos}
+    out = attention(q, k, v, q_pos, kv_pos, causal=causal,
+                    chunk=cfg.attn_chunk if T > cfg.attn_chunk else 0)
+    out = out.reshape(B, T, h * hd)
+    out = dense(out, p["wo"], f"{prefix}/wo", ctx, bias=p["bo"])
+    return out, new_cache
+
+
+def _mlp(cfg, p, x, ctx, prefix):
+    hidden = gelu(dense(x, p["w1"], f"{prefix}/w1", ctx, bias=p["b1"]))
+    hidden = shard_hint(hidden, BATCH_AXES, None, MODEL)
+    return dense(hidden, p["w2"], f"{prefix}/w2", ctx, bias=p["b2"])
+
+
+def encode(cfg, params, enc_embeds, ctx_opts=None, taps=None,
+           collect=False):
+    """enc_embeds: (B, T, D) stubbed frame embeddings -> (B, T, D)."""
+    B, T, D = enc_embeds.shape
+    dt = jnp.dtype(cfg.dtype)
+    pos = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+    x = (enc_embeds.astype(jnp.float32) + _sinusoid(pos, D)).astype(dt)
+    x = shard_acts(x)
+    stats_all = {}
+
+    def body(xc, xs):
+        p_l, taps_l = xs
+        ctx = Ctx(taps=taps_l or None, collect=collect,
+                  soi_block=cfg.soi_block)
+        h, _ = _mha(cfg, p_l["attn"],
+                    layer_norm(xc, p_l["ln1"]["w"], p_l["ln1"]["b"]),
+                    None, ctx, "enc/attn", False, pos, pos)
+        xc = xc + h
+        xc = xc + _mlp(cfg, p_l["mlp"],
+                       layer_norm(xc, p_l["ln2"]["w"], p_l["ln2"]["b"]),
+                       ctx, "enc/mlp")
+        return xc, ctx.stats
+
+    taps_xs = {k: v for k, v in (taps or {}).items()
+               if k.startswith("enc/")}
+    fn = jax.checkpoint(body) if cfg.remat else body
+    x, stats = jax.lax.scan(fn, x, (params["enc"], taps_xs))
+    stats_all.update(stats)
+    x = layer_norm(x, params["enc_ln_f"]["w"], params["enc_ln_f"]["b"])
+    return x, stats_all
+
+
+def _mha_kv(cfg, p, xkv, ctx, prefix):
+    B = xkv.shape[0]
+    h, hd = cfg.n_heads, cfg.hd
+    k = dense(xkv, p["wk"], f"{prefix}/wk", ctx)
+    v = dense(xkv, p["wv"], f"{prefix}/wv", ctx, bias=p["bv"],
+              collect_gram=False)
+    return k.reshape(B, -1, h, hd), v.reshape(B, -1, h, hd)
+
+
+def decode(cfg, params, tokens, enc_out, taps=None, collect=False,
+           cache=None, last_only=False):
+    """Decoder pass. tokens: (B, T). Returns (logits, stats, new_cache).
+    ``last_only`` projects only the final position onto the vocab
+    (prefill path — see models/lm.forward)."""
+    B, T = tokens.shape
+    D = cfg.d_model
+    dt = jnp.dtype(cfg.dtype)
+    idx = cache["idx"] if cache is not None else None
+    base = jnp.arange(T, dtype=jnp.int32)[None, :]
+    pos = jnp.broadcast_to(base + (idx if idx is not None else 0), (B, T))
+    x = (cast(params["embed"], dt)[tokens].astype(jnp.float32)
+         + _sinusoid(pos, D)).astype(dt)
+    x = shard_acts(x)
+    enc_pos = jnp.broadcast_to(
+        jnp.arange(enc_out.shape[1], dtype=jnp.int32),
+        (B, enc_out.shape[1]))
+
+    def body(xc, xs):
+        p_l, taps_l, cache_l = xs
+        ctx = Ctx(taps=taps_l or None, collect=collect,
+                  soi_block=cfg.soi_block)
+        self_cache = cache_l["self"] if cache_l is not None else None
+        h, nself = _mha(cfg, p_l["attn"],
+                        layer_norm(xc, p_l["ln1"]["w"], p_l["ln1"]["b"]),
+                        None, ctx, "dec/attn", True, pos, pos,
+                        cache=self_cache, idx=idx)
+        xc = xc + h
+        xq = layer_norm(xc, p_l["lnx"]["w"], p_l["lnx"]["b"])
+        if cache_l is not None:
+            kv = (cache_l["cross_k"].astype(xq.dtype),
+                  cache_l["cross_v"].astype(xq.dtype))
+        else:
+            kv = _mha_kv(cfg, p_l["cross"], enc_out, ctx, "dec/cross")
+        h, _ = _mha(cfg, p_l["cross"], xq, None, ctx, "dec/cross", False,
+                    pos, enc_pos, shared_kv=kv)
+        xc = xc + h
+        xc = xc + _mlp(cfg, p_l["mlp"],
+                       layer_norm(xc, p_l["ln2"]["w"], p_l["ln2"]["b"]),
+                       ctx, "dec/mlp")
+        ncache = {"self": nself} if cache_l is not None else None
+        return xc, (ctx.stats, ncache)
+
+    taps_xs = {k: v for k, v in (taps or {}).items()
+               if k.startswith("dec/")}
+    layer_cache = cache["layers"] if cache is not None else None
+    # remat on the training path only (decode carries a cache)
+    fn = jax.checkpoint(body) if (cfg.remat and cache is None) else body
+    x, (stats, ncache) = jax.lax.scan(
+        fn, x, (params["dec"], taps_xs, layer_cache))
+    x = layer_norm(x, params["dec_ln_f"]["w"], params["dec_ln_f"]["b"])
+    if last_only:
+        x = x[:, -1:]
+    # vocab padded to a shardable multiple of 128 (whisper's 51865 is
+    # not 16-divisible => unsharded logits dominate HBM otherwise);
+    # padded columns masked so loss/argmax are unchanged
+    head = params["embed"].T
+    v = head.shape[-1]
+    vpad = (-v) % 128
+    if vpad:
+        head = jnp.pad(head, ((0, 0), (0, vpad)))
+    logits = jax.lax.dot_general(
+        x, cast(head, dt), (((2,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    if vpad:
+        logits = logits + jnp.where(jnp.arange(v + vpad) < v, 0.0,
+                                    -1e30)
+    logits = shard_hint(logits, BATCH_AXES, None, MODEL)
+    new_cache = None
+    if cache is not None:
+        new_cache = {
+            "layers": {"self": ncache["self"],
+                       "cross_k": cache["layers"]["cross_k"],
+                       "cross_v": cache["layers"]["cross_v"]},
+            "idx": idx + T,
+        }
+    return logits, stats, new_cache
+
+
+def loss_fn(cfg, params, batch, taps=None, collect=False):
+    enc_out, stats_e = encode(cfg, params, batch["enc_embeds"],
+                              taps=taps, collect=collect)
+    logits, stats_d, _ = decode(cfg, params, batch["tokens"], enc_out,
+                                taps=taps, collect=collect)
+    labels = batch["tokens"][:, 1:]
+    lg = logits[:, :-1].astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(lg, axis=-1)
+    gold = jnp.take_along_axis(lg, labels[..., None], axis=-1)[..., 0]
+    loss = jnp.mean(logz - gold)
+    stats = {**stats_e, **stats_d}
+    return loss, stats
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch: int, self_len: int, enc_len: int,
+               dtype=jnp.bfloat16) -> Dict:
+    h, hd = cfg.n_heads, cfg.hd
+    L = cfg.n_dec_layers
+
+    def one(_):
+        return {
+            "self": {
+                "k": jnp.zeros((batch, self_len, h, hd), dtype),
+                "v": jnp.zeros((batch, self_len, h, hd), dtype),
+                "pos": jnp.full((batch, self_len), 2 ** 30, jnp.int32),
+            },
+            "cross_k": jnp.zeros((batch, enc_len, h, hd), dtype),
+            "cross_v": jnp.zeros((batch, enc_len, h, hd), dtype),
+        }
+
+    return {"layers": jax.vmap(one)(jnp.arange(L)),
+            "idx": jnp.zeros((), jnp.int32)}
+
+
+def prefill(cfg, params, batch, cache):
+    """Encode frames + prefill the decoder prompt."""
+    enc_out, _ = encode(cfg, params, batch["enc_embeds"])
+
+    # precompute cross k/v per decoder layer into the cache
+    def kv_body(_, p_l):
+        k, v = _mha_kv(cfg, p_l["cross"], enc_out, None, "dec/cross")
+        return None, (k, v)
+
+    _, (cks, cvs) = jax.lax.scan(kv_body, None, params["dec"])
+    cache = dict(cache)
+    layers = dict(cache["layers"])
+    layers["cross_k"] = cks.astype(cache["layers"]["cross_k"].dtype)
+    layers["cross_v"] = cvs.astype(cache["layers"]["cross_v"].dtype)
+    cache["layers"] = layers
+
+    logits, _, cache = decode(cfg, params, batch["tokens"], enc_out,
+                              cache=cache, last_only=True)
+    return logits[:, -1], cache
+
+
+def decode_step(cfg, params, token, cache):
+    B = token.shape[0]
+    enc_len = cache["layers"]["cross_k"].shape[2]
+    dummy_enc = jnp.zeros((B, enc_len, cfg.d_model),
+                          jnp.dtype(cfg.dtype))
+    logits, _, cache = decode(cfg, params, token, dummy_enc, cache=cache)
+    return logits[:, -1], cache
+
+
+def kfac_specs(cfg) -> Dict[str, LinearSpec]:
+    d, f, h, hd = cfg.d_model, cfg.d_ff, cfg.n_heads, cfg.hd
+    Le, Ld = (cfg.n_enc_layers,), (cfg.n_dec_layers,)
+    specs = {}
+    for pfx, st in (("enc", Le),):
+        specs[f"{pfx}/attn/wq"] = LinearSpec(d, h * hd, st)
+        specs[f"{pfx}/attn/wk"] = LinearSpec(d, h * hd, st,
+                                             share_a_with=f"{pfx}/attn/wq")
+        specs[f"{pfx}/attn/wv"] = LinearSpec(d, h * hd, st,
+                                             share_a_with=f"{pfx}/attn/wq")
+        specs[f"{pfx}/attn/wo"] = LinearSpec(h * hd, d, st)
+        specs[f"{pfx}/mlp/w1"] = LinearSpec(d, f, st)
+        specs[f"{pfx}/mlp/w2"] = LinearSpec(f, d, st)
+    specs["dec/attn/wq"] = LinearSpec(d, h * hd, Ld)
+    specs["dec/attn/wk"] = LinearSpec(d, h * hd, Ld,
+                                      share_a_with="dec/attn/wq")
+    specs["dec/attn/wv"] = LinearSpec(d, h * hd, Ld,
+                                      share_a_with="dec/attn/wq")
+    specs["dec/attn/wo"] = LinearSpec(h * hd, d, Ld)
+    specs["dec/cross/wq"] = LinearSpec(d, h * hd, Ld)
+    specs["dec/cross/wk"] = LinearSpec(d, h * hd, Ld)
+    specs["dec/cross/wv"] = LinearSpec(d, h * hd, Ld,
+                                       share_a_with="dec/cross/wk")
+    specs["dec/cross/wo"] = LinearSpec(h * hd, d, Ld)
+    specs["dec/mlp/w1"] = LinearSpec(d, f, Ld)
+    specs["dec/mlp/w2"] = LinearSpec(f, d, Ld)
+    return specs

@@ -1,0 +1,1 @@
+from repro.optim.first_order import Adam, SGD, Optimizer  # noqa: F401

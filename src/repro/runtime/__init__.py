@@ -1,0 +1,7 @@
+from repro.runtime.watchdog import StepWatchdog  # noqa: F401
+from repro.runtime.elastic import (  # noqa: F401
+    DeviceLoss,
+    elastic_mesh,
+    largest_mesh,
+)
+from repro.runtime.loop import TrainLoop, LoopConfig  # noqa: F401

@@ -1,0 +1,195 @@
+"""Fault-tolerant training loop: checkpoint/restart, straggler watchdog,
+elastic re-mesh on device loss.
+
+The loop owns generic train *state* (a pytree) and a *program*:
+
+    program.init_state(mesh)            -> state
+    program.make_step(mesh)             -> step_fn(state, batch) -> (state, metrics)
+    program.state_sharding(mesh)        -> key -> Sharding   (for restore)
+
+Recovery policy (DESIGN.md §5):
+
+* every ``ckpt_every`` steps the state is snapshotted asynchronously
+  (atomic on disk; the data cursor rides in the manifest);
+* a failed step (device loss, hang, XLA runtime error) triggers:
+  1. drop the poisoned jit executable & mesh,
+  2. re-form the largest healthy mesh (``elastic_mesh``),
+  3. restore the last checkpoint *resharded* onto the new mesh,
+  4. replay the data stream from the restored cursor (deterministic
+     pipeline => exactly-once semantics for optimizer updates),
+* after ``max_failures`` consecutive failures the loop re-raises —
+  at that point the job-level scheduler owns recovery.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import logging
+import time
+from typing import Any, Callable, Dict, Optional, Protocol
+
+import jax
+
+from repro.checkpoint import CheckpointManager, latest_step, restore
+from repro.data import DataCursor, SyntheticTokens, make_global_batch
+from repro.runtime.watchdog import StepDeadlineExceeded, StepWatchdog
+
+log = logging.getLogger("repro.runtime")
+
+
+class Program(Protocol):
+    def init_state(self, mesh) -> Any: ...
+
+    def make_step(self, mesh) -> Callable: ...
+
+    def state_sharding(self, mesh) -> Callable: ...
+
+
+@dataclasses.dataclass
+class LoopConfig:
+    total_steps: int
+    ckpt_dir: str
+    ckpt_every: int = 50
+    keep: int = 3
+    max_failures: int = 3
+    model_parallel: int = 1
+    log_every: int = 10
+    straggler_factor: float = 2.0
+    hard_deadline_s: Optional[float] = None
+
+
+class TrainLoop:
+    def __init__(
+        self,
+        cfg: LoopConfig,
+        program: Program,
+        dataset: SyntheticTokens,
+        *,
+        mesh_fn: Optional[Callable[..., Any]] = None,
+        inject: Optional[Callable[[int], None]] = None,
+    ):
+        """``inject(step)`` is the fault-drill hook: tests/examples raise
+        DeviceLoss/StepDeadlineExceeded from it to exercise recovery."""
+        from repro.runtime.elastic import elastic_mesh
+
+        self.cfg = cfg
+        self.program = program
+        self.dataset = dataset
+        self.mesh_fn = mesh_fn or (
+            lambda exclude=0: elastic_mesh(cfg.model_parallel,
+                                           exclude=exclude))
+        self.inject = inject
+        self.ckpt = CheckpointManager(cfg.ckpt_dir, keep=cfg.keep)
+        self.watchdog = StepWatchdog(
+            straggler_factor=cfg.straggler_factor,
+            hard_deadline_s=cfg.hard_deadline_s)
+        self.metrics_history: list = []
+        self.n_recoveries = 0
+        self._mesh_cm = None
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def _fresh(self, mesh):
+        state = self.program.init_state(mesh)
+        return state, DataCursor(0)
+
+    def _restore(self, mesh):
+        like = self.program.init_state(mesh)   # structure donor
+        shard_of = self.program.state_sharding(mesh)
+        state, manifest = restore(
+            self.cfg.ckpt_dir, like,
+            sharding_fn=lambda key, arr: shard_of(key))
+        cursor = DataCursor.from_json(manifest["meta"]["cursor"])
+        log.info("restored step %d onto %s", manifest["step"],
+                 dict(mesh.shape))
+        return state, cursor
+
+    def _start(self, exclude: int = 0):
+        mesh = self.mesh_fn(exclude=exclude)
+        # expose the abstract mesh so model shard_hints are live inside
+        # the jitted steps; re-entered on every (elastic) re-mesh
+        if self._mesh_cm is not None:
+            self._mesh_cm.__exit__(None, None, None)
+        self._mesh_cm = jax.set_mesh(mesh)
+        self._mesh_cm.__enter__()
+        if latest_step(self.cfg.ckpt_dir) is not None:
+            state, cursor = self._restore(mesh)
+        else:
+            state, cursor = self._fresh(mesh)
+        step_fn = self.program.make_step(mesh)
+        return mesh, state, cursor, step_fn
+
+    # -- main --------------------------------------------------------------
+
+    def run(self) -> Dict[str, Any]:
+        failures = 0
+        exclude = 0
+        mesh, state, cursor, step_fn = self._start()
+        t_start = time.monotonic()
+
+        while cursor.step < self.cfg.total_steps:
+            step = cursor.step
+            try:
+                if self.inject is not None:
+                    self.inject(step)
+                batch = make_global_batch(self.dataset, cursor, mesh)
+                with self.watchdog.step():
+                    state, metrics = step_fn(state, batch)
+                    jax.block_until_ready(
+                        jax.tree.leaves(metrics)[0])
+            except (StepDeadlineExceeded, Exception) as e:  # noqa: BLE001
+                if not _recoverable(e):
+                    raise
+                failures += 1
+                self.n_recoveries += 1
+                log.warning("step %d failed (%s); recovery %d/%d",
+                            step, type(e).__name__, failures,
+                            self.cfg.max_failures)
+                if failures > self.cfg.max_failures:
+                    raise
+                self.ckpt.wait()
+                exclude += getattr(e, "lost", 0)
+                mesh, state, cursor, step_fn = self._start(exclude)
+                # fresh timing window: the first post-restore step
+                # recompiles and must not trip the hang deadline
+                self.watchdog = StepWatchdog(
+                    straggler_factor=self.cfg.straggler_factor,
+                    hard_deadline_s=self.cfg.hard_deadline_s)
+                continue
+
+            failures = 0
+            cursor = cursor.advance()
+            if self.watchdog.last_was_straggler:
+                log.warning("straggler step %d (%d so far)", step,
+                            self.watchdog.n_stragglers)
+            if step % self.cfg.log_every == 0:
+                m = {k: float(v) for k, v in metrics.items()}
+                self.metrics_history.append({"step": step, **m})
+                log.info("step %d %s", step, m)
+            if cursor.step % self.cfg.ckpt_every == 0 \
+                    or cursor.step == self.cfg.total_steps:
+                self.ckpt.save_async(
+                    cursor.step, state,
+                    meta={"cursor": cursor.to_json()})
+
+        self.ckpt.wait()
+        if self._mesh_cm is not None:
+            self._mesh_cm.__exit__(None, None, None)
+            self._mesh_cm = None
+        return {
+            "steps": cursor.step,
+            "wall_s": time.monotonic() - t_start,
+            "recoveries": self.n_recoveries,
+            "stragglers": self.watchdog.n_stragglers,
+            "history": self.metrics_history,
+        }
+
+
+def _recoverable(e: BaseException) -> bool:
+    from repro.runtime.elastic import DeviceLoss
+
+    if isinstance(e, (DeviceLoss, StepDeadlineExceeded)):
+        return True
+    # XLA surface for real device failure
+    return "RESOURCE_EXHAUSTED" in str(e) or "DataLoss" in str(e) \
+        or "device" in str(e).lower() and "error" in str(e).lower()

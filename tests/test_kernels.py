@@ -1,0 +1,196 @@
+"""Pallas kernel validation: shape/dtype sweeps vs the ref.py oracles
+(interpret=True executes the kernel body per-block on CPU, covering the
+BlockSpec tiling logic exactly as on TPU)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import bitslice_mm, fused_gram_inv, neumann_inv
+from repro.kernels import ref
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+# ---------------------------------------------------------------------------
+# bitslice_mm
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,k,n", [
+    (128, 128, 128),      # single block
+    (256, 384, 128),      # multi-block K sweep
+    (300, 200, 130),      # ragged (padding path)
+    (64, 64, 64),         # smaller than one block
+    (1, 257, 5),          # degenerate vector-ish
+])
+def test_bitslice_mm_matches_oracle(m, k, n):
+    r = _rng(m * 1000 + k * 10 + n)
+    a = r.standard_normal((m, k)).astype(np.float32)
+    b = r.standard_normal((k, n)).astype(np.float32)
+    out = bitslice_mm(a, b, bm=128, bn=128, bk=128)
+    oracle = ref.bitslice_mm_ref(a, b)
+    np.testing.assert_allclose(out, oracle, rtol=0, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.float16])
+def test_bitslice_mm_dtypes(dtype):
+    r = _rng(7)
+    a = r.standard_normal((130, 96)).astype(dtype)
+    b = r.standard_normal((96, 70)).astype(dtype)
+    out = bitslice_mm(a, b, bm=128, bn=128, bk=128)
+    exact = a.astype(np.float64) @ b.astype(np.float64)
+    rel = np.max(np.abs(out - exact)) / np.max(np.abs(exact))
+    # hi/lo composition recovers ~fp32 accuracy from bf16 operands
+    assert rel < 1e-5
+
+
+def test_bitslice_mm_beats_plain_bf16():
+    r = _rng(3)
+    a = r.standard_normal((256, 256)).astype(np.float32)
+    b = r.standard_normal((256, 256)).astype(np.float32)
+    exact = a.astype(np.float64) @ b.astype(np.float64)
+    sliced = np.asarray(bitslice_mm(a, b))
+    plain = np.asarray(
+        (jnp.asarray(a, jnp.bfloat16) @ jnp.asarray(b, jnp.bfloat16)
+         ).astype(jnp.float32))
+    err_sliced = np.max(np.abs(sliced - exact))
+    err_plain = np.max(np.abs(plain - exact))
+    assert err_sliced < err_plain / 100  # > 2 decimal orders better
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 200), st.integers(1, 200), st.integers(1, 200),
+       st.integers(0, 2 ** 31 - 1))
+def test_bitslice_mm_property(m, k, n, seed):
+    r = _rng(seed)
+    a = (r.standard_normal((m, k)) * r.choice([1e-3, 1.0, 1e3])).astype(
+        np.float32)
+    b = r.standard_normal((k, n)).astype(np.float32)
+    out = bitslice_mm(a, b, bm=128, bn=128, bk=128)
+    oracle = ref.bitslice_mm_ref(a, b)
+    # kernel and oracle sum the fp32 partials in different orders
+    # (per-K-block scratch vs whole-matmul), so the bound must scale
+    # with the dot magnitude: sqrt(k)*eps_fp32*|a||b|-style. A real
+    # tiling bug shows up at O(|dot|), orders above this.
+    amax = max(float(np.abs(a).max()), 1e-30)
+    bmax = max(float(np.abs(b).max()), 1e-30)
+    atol = 1e-5 * (k ** 0.5) * amax * bmax + 1e-7
+    np.testing.assert_allclose(out, oracle, rtol=1e-5, atol=atol)
+
+
+# ---------------------------------------------------------------------------
+# neumann_inv
+# ---------------------------------------------------------------------------
+
+def _spd(r, nb, n, cond_scale=1.0):
+    m = r.standard_normal((nb, n, n)).astype(np.float32) * cond_scale
+    return np.einsum("bij,bkj->bik", m, m) / n + 1e-3 * np.eye(
+        n, dtype=np.float32)
+
+
+@pytest.mark.parametrize("nb,n", [(1, 128), (3, 96), (2, 130), (4, 64)])
+def test_neumann_inv_matches_oracle(nb, n):
+    r = _rng(nb * 1000 + n)
+    a = _spd(r, nb, n)
+    damp = 0.03 * np.trace(a, axis1=1, axis2=2) / n
+    out = neumann_inv(a, damp, ns_iters=20, taylor_terms=4,
+                      refine_steps=2)
+    oracle = ref.neumann_inv_ref(a, damp, ns_iters=20, taylor_terms=4,
+                                 refine_steps=2)
+    np.testing.assert_allclose(out, oracle, rtol=0, atol=1e-5)
+
+
+def test_neumann_inv_is_accurate_inverse():
+    """Algorithmic check on the bf16 MXU ladder: solution accuracy on
+    Tikhonov-damped SPD blocks. At the paper's damping (0.03, kappa~130
+    here) the hi/lo ladder reaches ~2^-14 relative — bounded by
+    kappa * bf16-partial-product noise; the *paper's own 16-bit regime*
+    (fixed-point circuit, Fig 4b) is validated in
+    tests/test_precision_inv.py. Stronger damping recovers more bits,
+    matching the paper's condition-number argument (Sec. III-A.3)."""
+    r = _rng(11)
+    n, nb = 128, 2
+    a = _spd(r, nb, n)
+    for damp_rel, tol_bits in [(0.03, 13.0), (0.3, 15.0)]:
+        damp = damp_rel * np.trace(a, axis1=1, axis2=2) / n
+        out = np.asarray(neumann_inv(a, damp, ns_iters=20,
+                                     taylor_terms=5, refine_steps=2))
+        ad = a + damp[:, None, None] * np.eye(n, dtype=np.float32)
+        exact = np.linalg.inv(ad.astype(np.float64))
+        rel = np.max(np.abs(out - exact)) / np.max(np.abs(exact))
+        assert rel < 2.0 ** -tol_bits, (damp_rel, rel)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(8, 150), st.integers(1, 3),
+       st.integers(0, 2 ** 31 - 1))
+def test_neumann_inv_property(n, nb, seed):
+    r = _rng(seed)
+    a = _spd(r, nb, n)
+    damp = 0.05 * np.trace(a, axis1=1, axis2=2) / n
+    out = np.asarray(neumann_inv(a, damp, ns_iters=22, taylor_terms=4,
+                                 refine_steps=2))
+    ad = a + damp[:, None, None] * np.eye(n, dtype=np.float32)
+    resid = np.einsum("bij,bjk->bik", out, ad) - np.eye(n)
+    assert np.max(np.abs(resid)) < 1e-3
+
+
+# ---------------------------------------------------------------------------
+# fused_gram_inv
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("t,nb,n,bt", [
+    (512, 1, 128, 256),    # exact tiling
+    (700, 2, 100, 256),    # ragged T and n
+    (128, 3, 64, 128),     # single-tile T
+    (1030, 1, 130, 512),   # ragged everything
+])
+def test_fused_gram_inv_matches_oracle(t, nb, n, bt):
+    r = _rng(t + nb + n)
+    a = r.standard_normal((t, nb, n)).astype(np.float32)
+    out = fused_gram_inv(a, rel_damp=0.05, bt=bt, ns_iters=20,
+                         taylor_terms=4, refine_steps=2)
+    oracle = ref.fused_gram_inv_ref(a, rel_damp=0.05, ns_iters=20,
+                                    taylor_terms=4, refine_steps=2)
+    np.testing.assert_allclose(out, oracle, rtol=0, atol=2e-4)
+
+
+def test_fused_gram_inv_matches_exact():
+    """End to end: fused path == materialize+linalg.inv to ~fp32."""
+    r = _rng(5)
+    a = r.standard_normal((600, 2, 96)).astype(np.float32)
+    out = fused_gram_inv(a, rel_damp=0.05, bt=256, ns_iters=22,
+                         taylor_terms=5, refine_steps=2)
+    exact = ref.exact_gram_inv(a, 0.05)
+    rel = float(jnp.max(jnp.abs(out - exact)) / jnp.max(jnp.abs(exact)))
+    assert rel < 1e-4
+
+
+def test_fused_matches_composed_inverse_path():
+    """The kernel and core.precision_inv.composed_inverse implement the
+    same algorithm: cross-validate the two implementations."""
+    from repro.core.precision_inv import composed_inverse
+    from repro.core import soi
+
+    r = _rng(9)
+    a = r.standard_normal((512, 1, 128)).astype(np.float32)
+    out_k = np.asarray(fused_gram_inv(
+        a, rel_damp=0.05, bt=256, ns_iters=14, taylor_terms=4,
+        refine_steps=1))[0]
+    gram = np.einsum("tbn,tbm->bnm", a, a)[0] / a.shape[0]
+    lam = float(0.05 * np.trace(gram) / 128 + 1e-8)
+    out_c = np.asarray(composed_inverse(
+        jnp.asarray(gram), lam, ns_iters=14, taylor_terms=4,
+        refine_steps=1))
+    # identical algorithm, different operand layouts: tolerance covers
+    # the exact-Gram (core path) vs hi/lo-Gram (kernel) difference
+    np.testing.assert_allclose(out_k, out_c, rtol=0, atol=5e-3)
+    ad = gram + lam * np.eye(128, dtype=np.float32)
+    for m in (out_k, out_c):
+        assert np.max(np.abs(m @ ad - np.eye(128))) < 1e-4
