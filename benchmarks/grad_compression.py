@@ -11,7 +11,10 @@ actually schedules.
 
 Run: PYTHONPATH=src python -m benchmarks.grad_compression
 (requires the 512-device dry-run env; spawned as a subprocess with the
-flag set, like launch/dryrun.py).
+flag set, like launch/dryrun.py). For a reduced probe that still
+crosses a real 2-way ``pod`` axis (CI / laptops), set
+``REPRO_GC_DEVICES=2`` — the child then builds a (pod=2, data=N/2,
+model=1) mesh instead of the production (2, 16, 16).
 """
 
 from __future__ import annotations
@@ -25,7 +28,13 @@ from benchmarks.common import print_csv
 
 _CHILD = r"""
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+_NDEV = int(os.environ.get("REPRO_GC_DEVICES", "512"))
+if _NDEV < 512:
+    # reduced-probe mesh is (2, N//2, 1): clamp to an even count >= 2
+    # so the forced device pool matches the mesh size exactly
+    _NDEV = max(2, _NDEV - (_NDEV % 2))
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=%d" % _NDEV)
 import json
 import jax
 import jax.numpy as jnp
@@ -38,8 +47,12 @@ from repro.launch import hlo_analysis
 from repro.launch import steps as steps_mod
 from repro.launch.mesh import make_production_mesh
 
-mesh = make_production_mesh(multi_pod=True)
-cfg = get_config("llama3.2-1b")
+if _NDEV >= 512:
+    mesh = make_production_mesh(multi_pod=True)
+else:
+    # reduced probe: keep the DCN-crossing pod axis, shrink the rest
+    mesh = jax.make_mesh((2, _NDEV // 2, 1), ("pod", "data", "model"))
+cfg = get_config(os.environ.get("REPRO_GC_ARCH", "llama3.2-1b"))
 params = steps_mod.abstract_params(cfg)
 pshard = shard_rules.param_sharding(params, mesh)
 

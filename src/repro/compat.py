@@ -1,0 +1,119 @@
+"""Backfills for newer JAX API spellings on older installed jaxlibs.
+
+The codebase is written against the post-0.5 "sharding in types" API
+surface (``jax.set_mesh``, ``jax.shard_map``, ``jax.sharding.AxisType``,
+``jax.sharding.get_abstract_mesh``, ``jax.make_mesh(..., axis_types=)``).
+The container bakes jax 0.4.x, where those spellings do not exist yet but
+the underlying machinery (mesh context managers, the experimental
+shard_map, with_sharding_constraint) does. Importing this module installs
+thin, guarded aliases so the same source runs on both generations:
+
+* every shim is installed only when the attribute is missing, so on a
+  newer jax this module is a no-op;
+* ``set_mesh`` maps onto the legacy ``with mesh:`` thread-resources
+  context (same visibility rule: hints/shard_map see the mesh while
+  tracing happens inside the context);
+* ``get_abstract_mesh`` returns the active *physical* mesh (jax 0.4.x
+  has no abstract-mesh tracking); callers only use ``.empty``,
+  ``.axis_names`` and ``.shape``, which Mesh provides;
+* ``shard_map(check_vma=...)`` maps onto ``check_rep=...``.
+
+This module is imported from ``repro/__init__.py`` so any
+``import repro.<anything>`` makes the full API surface available.
+"""
+
+from __future__ import annotations
+
+import enum
+import functools
+import inspect
+
+import jax
+
+
+def _install():
+    # -- jax.sharding.AxisType -------------------------------------------
+    if not hasattr(jax.sharding, "AxisType"):
+        class AxisType(enum.Enum):
+            Auto = "auto"
+            Explicit = "explicit"
+            Manual = "manual"
+
+        jax.sharding.AxisType = AxisType
+
+    # -- jax.make_mesh(..., axis_types=...) ------------------------------
+    params = inspect.signature(jax.make_mesh).parameters
+    if "axis_types" not in params:
+        _orig_make_mesh = jax.make_mesh
+
+        @functools.wraps(_orig_make_mesh)
+        def make_mesh(axis_shapes, axis_names, *, axis_types=None, **kw):
+            del axis_types          # 0.4.x meshes are implicitly Auto
+            return _orig_make_mesh(axis_shapes, axis_names, **kw)
+
+        jax.make_mesh = make_mesh
+
+    # -- jax.set_mesh ----------------------------------------------------
+    if not hasattr(jax, "set_mesh"):
+        class _MeshContext:
+            """Context handle mirroring set_mesh: usable as a ``with``
+            target or via explicit __enter__/__exit__ (runtime/loop.py)."""
+
+            def __init__(self, mesh):
+                self.mesh = mesh
+
+            def __enter__(self):
+                self.mesh.__enter__()
+                return self.mesh
+
+            def __exit__(self, *exc):
+                return self.mesh.__exit__(*exc)
+
+        def set_mesh(mesh):
+            return _MeshContext(mesh)
+
+        jax.set_mesh = set_mesh
+
+    # -- jax.sharding.get_abstract_mesh ----------------------------------
+    if not hasattr(jax.sharding, "get_abstract_mesh"):
+        def get_abstract_mesh():
+            from jax._src import mesh as _mesh_lib
+            return _mesh_lib.thread_resources.env.physical_mesh
+
+        jax.sharding.get_abstract_mesh = get_abstract_mesh
+
+    # -- pallas-TPU CompilerParams (renamed from TPUCompilerParams) ------
+    try:
+        from jax.experimental.pallas import tpu as _pltpu
+        if not hasattr(_pltpu, "CompilerParams") and \
+                hasattr(_pltpu, "TPUCompilerParams"):
+            _pltpu.CompilerParams = _pltpu.TPUCompilerParams
+    except ImportError:
+        pass
+
+    # -- jax.shard_map(check_vma=...) ------------------------------------
+    if not hasattr(jax, "shard_map"):
+        from jax.experimental.shard_map import shard_map as _shard_map
+
+        def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None,
+                      check_rep=None, **kw):
+            if check_rep is None:
+                check_rep = True if check_vma is None else check_vma
+            return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, check_rep=check_rep,
+                              **kw)
+
+        jax.shard_map = shard_map
+
+
+_install()
+
+
+def active_mesh():
+    """The mesh currently in scope (``jax.set_mesh`` / ``with mesh:``),
+    or None. This is the single place dist/api.shard_hint consults, so
+    hint behavior is uniform across jax generations."""
+    m = jax.sharding.get_abstract_mesh()
+    if m is None or getattr(m, "empty", True):
+        return None
+    return m

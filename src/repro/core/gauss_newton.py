@@ -12,10 +12,12 @@ from __future__ import annotations
 from typing import Mapping
 
 import jax
+import jax.numpy as jnp
 
 from repro.core import kfac, soi
 from repro.core.kfac import KFACConfig, KFACState
 from repro.core.soi import LinearSpec
+from repro.dist.api import path_key
 
 
 def gn_specs(specs: Mapping[str, LinearSpec]) -> dict:
@@ -33,11 +35,10 @@ def precondition(grads, state: KFACState, specs: Mapping[str, LinearSpec],
     flat, treedef = jax.tree_util.tree_flatten_with_path(grads)
     out = []
     for path, g in flat:
-        name = kfac._path_str(path)
+        name = path_key(path)
         if name in specs:
             g_inv = state.inverses[name]["G_inv"]
             bs = g_inv.shape[-1]
-            import jax.numpy as jnp
             d_out = g.shape[-1]
             gp = soi.pad_to_blocks(g, -1, bs)
             nb = gp.shape[-1] // bs

@@ -28,6 +28,7 @@ import jax.numpy as jnp
 from repro.core import soi
 from repro.core.precision_inv import composed_inverse
 from repro.core.soi import LinearSpec
+from repro.dist.api import factor_axes, path_key
 
 
 @dataclasses.dataclass(frozen=True)
@@ -42,8 +43,6 @@ class KFACConfig:
     stats_batch: int = 8            # SU subsample: sequences per pass
     stats_seq: int = 1024           # SU subsample: tokens per sequence
     kl_clip: float = 1.0            # trust-region scale clip
-    # inversion method: "composed" = paper scheme on MXU primitives,
-    # "exact" = jnp.linalg.inv baseline (for ablation)
     # inversion method: "composed" = paper scheme (NS + Neumann + refine),
     # "composed_fast" = beyond-paper variant dropping the Neumann stage —
     # on the MXU the refinement against full-precision A subsumes Loop A
@@ -67,18 +66,6 @@ class KFACState(NamedTuple):
     momentum: Any                   # pytree like params
     adam_mu: Any                    # pytree like params (first-order path)
     adam_nu: Any
-
-
-def _path_str(path) -> str:
-    parts = []
-    for p in path:
-        if hasattr(p, "key"):
-            parts.append(str(p.key))
-        elif hasattr(p, "idx"):
-            parts.append(str(p.idx))
-        else:
-            parts.append(str(p))
-    return "/".join(parts)
 
 
 def init(params: Any, specs: Mapping[str, LinearSpec],
@@ -215,10 +202,8 @@ def precondition(grads: Any, state: KFACState,
     leaves, treedef = flat
     out = []
     for path, g in leaves:
-        name = _path_str(path)
+        name = path_key(path)
         if name in specs:
-            from repro.dist.api import factor_axes
-
             spec = specs[name]
             inv = state.inverses[name]
             a_name = spec.share_a_with or name
@@ -227,7 +212,7 @@ def precondition(grads: Any, state: KFACState,
                 g, a_inv, inv["G_inv"], axes=factor_axes(name)))
         else:
             out.append(g)
-    return jax.tree_util.tree_unflatten(treedef, [x for x in out])
+    return jax.tree_util.tree_unflatten(treedef, out)
 
 
 def apply_updates(params: Any, grads: Any, state: KFACState,
@@ -261,7 +246,7 @@ def apply_updates(params: Any, grads: Any, state: KFACState,
     new_p, new_m, new_mu, new_nu = [], [], [], []
     for (path, p), d, g, m, mu, nvu in zip(
             leaves_p, leaves_pre, leaves_g, leaves_m, leaves_mu, leaves_nu):
-        name = _path_str(path)
+        name = path_key(path)
         if name in names:
             m2 = cfg.momentum * m + d * nu
             upd = cfg.lr * m2 + cfg.lr * cfg.weight_decay * p

@@ -27,6 +27,8 @@ from typing import Mapping, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.dist.api import shard_hint
+
 
 @dataclasses.dataclass(frozen=True)
 class LinearSpec:
@@ -162,8 +164,6 @@ def block_precondition(g: jax.Array, a_inv: jax.Array,
     image of the paper's "each SOI block on its own INV crossbar
     group". Hints pin that layout (EXPERIMENTS.md §Perf 1.4).
     """
-    from repro.dist.api import shard_hint
-
     ain, gout = axes[-2:]
     bi = a_inv.shape[-1]
     bo = g_inv.shape[-1]

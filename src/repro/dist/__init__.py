@@ -1,0 +1,13 @@
+"""Distributed layer: mesh-axis vocabulary and shard-hint API
+(:mod:`repro.dist.api`), name-pattern sharding rules for params /
+K-FAC factors / batches / caches (:mod:`repro.dist.sharding`), and
+int8 error-feedback gradient compression for the cross-pod all-reduce
+(:mod:`repro.dist.compression`).
+
+The TPU image of RePAST's mapping scheme (paper Sec. IV/V): SOI factor
+blocks ride the mesh axis of the weight dim they precondition, so
+``block_precondition`` and ``composed_inverse`` run shard-local — the
+analogue of pinning each SOI block to its own INV crossbar group.
+"""
+
+from repro.dist import api, compression, sharding  # noqa: F401

@@ -1,0 +1,132 @@
+"""Mesh-axis vocabulary + the shard-hint API used by all model code.
+
+Contract (consumed by models/*, core/soi, core/kfac, launch/steps):
+
+* ``POD``/``DATA``/``MODEL`` — canonical mesh axis names;
+  ``BATCH_AXES = (POD, DATA)`` is the batch-dim prefix (the ``pod``
+  axis exists only on multi-pod meshes and is filtered automatically).
+* :func:`shard_hint` — ``with_sharding_constraint`` that degrades to
+  identity when no mesh is active and silently drops axes that are
+  absent from the mesh or don't divide the dim. Model code can
+  therefore hint unconditionally; smoke tests on 1 CPU device trace
+  the exact same graphs.
+* :func:`shard_like_params` — constrain a param-shaped tree (stacked
+  gradients) onto the parameter layout, so the backward pass never
+  materializes a replicated dW.
+* :func:`path_key` — canonical '/'-joined pytree path; the key space
+  shared by ``kfac_specs`` names, the factor dicts and the sharding
+  rules.
+* :func:`factor_axes` — the block-axes tuple ``soi.block_precondition``
+  threads through its einsum hints, derived from the owning weight's
+  partitioning (single source of truth: ``sharding._param_pspec``).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Optional, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.compat import active_mesh
+
+POD = "pod"
+DATA = "data"
+MODEL = "model"
+
+#: Batch dims shard over the pure data-parallel axes (outer ``pod`` on
+#: multi-pod meshes, inner ``data`` everywhere).
+BATCH_AXES: Tuple[str, ...] = (POD, DATA)
+
+
+def _norm_entry(entry) -> Tuple[str, ...]:
+    if entry is None:
+        return ()
+    if isinstance(entry, str):
+        return (entry,)
+    return tuple(entry)
+
+
+def clean_spec(spec, shape, mesh) -> P:
+    """A PartitionSpec valid on ``mesh`` for an array of ``shape``.
+
+    Per dim: keep only axis names present in the mesh, then drop axes
+    (right-to-left) until the dim is divisible by the remaining axis
+    product. Non-divisible dims therefore degrade to replication
+    instead of crashing — any arch shards on any mesh."""
+    sizes = dict(mesh.shape)
+    out = []
+    for dim, entry in zip(shape, spec):
+        names = tuple(a for a in _norm_entry(entry) if a in sizes)
+        n = math.prod(sizes[a] for a in names)
+        while names and dim % n:
+            n //= sizes[names[-1]]
+            names = names[:-1]
+        if not names:
+            out.append(None)
+        elif len(names) == 1:
+            out.append(names[0])
+        else:
+            out.append(names)
+    return P(*out)
+
+
+def shard_hint(x: Any, *axes) -> Any:
+    """Hint ``x``'s layout: one entry per leading dim (None | axis name |
+    tuple of axis names). Identity when no mesh is active."""
+    mesh = active_mesh()
+    if mesh is None or not axes or not hasattr(x, "ndim"):
+        return x
+    spec = clean_spec(axes[: x.ndim], x.shape, mesh)
+    if all(e is None for e in spec):
+        return x
+    if isinstance(mesh, jax.sharding.Mesh):
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, spec))
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def path_key(path) -> str:
+    """Canonical string for a jax pytree key path: ``a/b/0/c``."""
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def shard_like_params(tree: Any) -> Any:
+    """Constrain a param-shaped tree (e.g. stacked dW from value_and_grad)
+    onto the parameter sharding rules. No-op without an active mesh."""
+    if active_mesh() is None:
+        return tree
+    from repro.dist.sharding import _param_pspec
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for pth, leaf in flat:
+        out.append(shard_hint(leaf, *_param_pspec(path_key(pth),
+                                                  leaf.ndim)))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def factor_axes(name: str) -> Tuple[Optional[str], ...]:
+    """Block-axes for ``soi.block_precondition`` on the factored linear
+    ``name``: ``(*stack_axes, a_block_axis, g_block_axis)``.
+
+    Derived from the owning weight's partition spec so the gradient's
+    (d_in, d_out) layout maps exactly onto (A-blocks, G-blocks) — both
+    einsum contractions stay communication-free. MoE weights carry the
+    expert dim on ``model`` as a stack axis."""
+    from repro.dist.sharding import _param_pspec
+
+    if "moe/" in name:
+        return tuple(_param_pspec(name, 4))[1:]
+    return tuple(_param_pspec(name, 3))[-2:]

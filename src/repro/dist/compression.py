@@ -1,0 +1,117 @@
+"""int8 error-feedback gradient compression for the cross-pod all-reduce.
+
+At multi-pod scale the only DCN-crossing collective is the once-per-step
+gradient all-reduce over the ``pod`` axis (launch/mesh.py). DCN is ~10x
+scarcer than ICI, so the summand is quantized to int8 (4x fewer wire
+bytes than fp32) with a persistent *error-feedback* buffer: each step
+quantizes ``g + e`` and carries the quantization residual into the next
+step, so the error never accumulates — over T steps the sum of the
+compressed updates differs from the true sum by at most one quantization
+step (tests/test_data_dist.py::test_error_feedback_recovers_mean).
+
+Codec: symmetric linear, shared scale ``s = pmax(max|g + e|)``,
+round-to-nearest into [-127, 127]. Per element the round-trip error is
+at most ``s / 254`` (the bound asserted by the property tests is the
+looser ``s / 127``).
+
+Wire format: the int8 code tensor is all-gathered over the reduce axis
+and the partial sums are formed locally in fp32 (a tree/ring all-reduce
+cannot sum int8 codes in-flight without overflow; gather + local
+reduce keeps every wire byte int8 while the arithmetic stays exact).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def quantize_code(x: jax.Array, scale) -> jax.Array:
+    """fp32 -> int8 code with symmetric scale ``scale`` (clip at 127)."""
+    s = jnp.maximum(jnp.asarray(scale, jnp.float32), 1e-30)
+    q = jnp.round(x.astype(jnp.float32) * (127.0 / s))
+    return jnp.clip(q, -127.0, 127.0).astype(jnp.int8)
+
+
+def dequantize_code(q: jax.Array, scale) -> jax.Array:
+    """int8 code -> fp32."""
+    s = jnp.asarray(scale, jnp.float32)
+    return q.astype(jnp.float32) * (s / 127.0)
+
+
+def init_error_buffers(grads: Any) -> Any:
+    """Persistent fp32 residual buffers, one per gradient leaf."""
+    return jax.tree.map(
+        lambda g: jnp.zeros(jnp.shape(g), jnp.float32), grads)
+
+
+def compressed_psum(g: jax.Array, err: jax.Array,
+                    axis_names: Sequence[str]
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """Per-leaf compressed mean over ``axis_names`` with error feedback.
+
+    For use *inside* ``shard_map``. Returns ``(mean, new_err)`` where
+    ``mean`` is the cross-device average of the dequantized codes and
+    ``new_err`` is this device's quantization residual (feed it back as
+    ``err`` next step). With no axes this is a local quantize round-trip
+    (the degenerate 1-device/no-mesh case)."""
+    axis_names = tuple(axis_names)
+    c = g.astype(jnp.float32) + err
+    s = jnp.max(jnp.abs(c))
+    for ax in axis_names:
+        s = jax.lax.pmax(s, ax)            # scalar: negligible wire cost
+    s = jnp.maximum(s, 1e-30)
+    q = quantize_code(c, s)
+    new_err = c - dequantize_code(q, s)
+    if not axis_names:
+        return dequantize_code(q, s), new_err
+    # int8 on the wire: gather codes over the (DCN) axis, reduce locally
+    gathered = jax.lax.all_gather(q, axis_names[0])
+    mean = jnp.mean(dequantize_code(gathered, s), axis=0)
+    for ax in axis_names[1:]:
+        mean = jax.lax.pmean(mean, ax)
+    return mean, new_err
+
+
+def compressed_allreduce_tree(grads: Any, errors: Any, mesh,
+                              axis_names: Sequence[str]
+                              ) -> Tuple[Any, Any]:
+    """Tree-level compressed all-reduce over *logical* gradient trees.
+
+    Every leaf goes through :func:`compressed_psum` over ``axis_names``
+    (filtered to axes the mesh actually has — a 1-device mesh degrades
+    to the local codec round-trip, preserving the error-feedback
+    invariant). Returns ``(means, new_errors)`` with the input tree
+    structures.
+
+    Contract: ``grads`` are ordinary (global) jax arrays, so each leaf
+    has ONE logical value — this wrapper replicates it into the
+    internal ``shard_map`` and is meant for eager/driver-level use and
+    the property tests. To combine genuinely *distinct* per-device
+    partial gradients (real data parallelism), call
+    :func:`compressed_psum` per leaf inside your own ``shard_map``'d
+    step, where per-device values exist — the pattern
+    ``benchmarks/grad_compression.py`` lowers and measures."""
+    axis_names = tuple(a for a in axis_names if a in mesh.axis_names)
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_e = jax.tree.leaves(errors)
+
+    def body(gs, es):
+        outs, errs = [], []
+        for g, e in zip(gs, es):
+            o, ne = compressed_psum(g, e, axis_names)
+            outs.append(o)
+            errs.append(ne)
+        return tuple(outs), tuple(errs)
+
+    if axis_names:
+        fn = jax.shard_map(body, mesh=mesh, in_specs=(P(), P()),
+                           out_specs=(P(), P()), check_vma=False)
+    else:
+        fn = body
+    outs, errs = fn(tuple(flat_g), tuple(flat_e))
+    return (jax.tree_util.tree_unflatten(treedef, list(outs)),
+            jax.tree_util.tree_unflatten(treedef, list(errs)))

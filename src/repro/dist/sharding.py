@@ -1,0 +1,170 @@
+"""Name-pattern-driven sharding rules for params, K-FAC state, batches
+and KV caches.
+
+The layout scheme (tests/test_data_dist.py pins the exact specs):
+
+* **Column-parallel** linears (wq/wk/wv, wg/wu, w1, SSM/RG-LRU input
+  projections): ``(*stack, d_in/'data', d_out/'model')`` — the 2D
+  ("megatron") layout where the forward matmul is local and the output
+  is already model-sharded.
+* **Row-parallel** linears (wo, wd, w2, output projections): the
+  transpose, ``(*stack, d_in/'model', d_out/'data')``.
+* **MoE expert weights** put the expert dim on ``model`` (expert
+  parallelism, one expert group per model shard) and the freed feature
+  dim on ``data``: wg/wu ``(L, E/'model', d_in/'data', d_out)``.
+* ``embed (V, D) -> ('model', 'data')``; ``lm_head (D, V) ->
+  ('data', 'model')``; 1-D params (norms, biases) replicate.
+* **K-FAC factors** ``(*stack, nb, bs, bs)``: the block-index dim
+  follows the mesh axis of the weight dim it preconditions
+  (A -> d_in's axis, G -> d_out's axis), so with
+  ``soi.block_size_for``'s 16-way-aligned block sizes the
+  (d) -> (nb, bs) blocking is shard-local and
+  ``soi.block_precondition`` runs with zero collectives — the TPU
+  image of the paper's "each SOI block on its own INV crossbar group".
+
+Everything funnels through :func:`repro.dist.api.clean_spec`, so dims
+that don't divide the mesh (or axes absent from it) degrade to
+replication instead of crashing.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.dist.api import BATCH_AXES, DATA, MODEL, clean_spec, path_key
+
+# trailing path component -> parallelism class
+_COL = {
+    "wq", "wk", "wv",                    # attention inputs
+    "wg", "wu", "w1",                    # MLP up/gate
+    "in_proj", "x_proj", "dt_proj",      # mamba
+    "in_x", "in_gate", "w_a", "w_x",     # rg-lru
+    "img_proj",                          # VLM frontend
+}
+_ROW = {"wo", "wd", "w2", "out_proj", "out"}
+
+_MOE_EXPERT = {"wg", "wu", "wd"}
+
+
+def _param_pspec(name: str, ndim: int) -> Tuple[Optional[str], ...]:
+    """Partition spec (as a plain tuple) for the weight at path ``name``
+    with ``ndim`` dims. Leading (stack) dims replicate except the MoE
+    expert dim, which rides ``model``."""
+    base = name.rsplit("/", 1)[-1]
+    if ndim < 2:
+        return (None,) * ndim
+    if "moe/" in name and base in _MOE_EXPERT and ndim >= 3:
+        lead = (None,) * (ndim - 3)
+        if base in _ROW:
+            return lead + (MODEL, None, DATA)
+        return lead + (MODEL, DATA, None)
+    if base == "embed":
+        two = (MODEL, DATA)
+    elif base == "lm_head":
+        two = (DATA, MODEL)
+    elif base in _COL:
+        two = (DATA, MODEL)
+    elif base in _ROW:
+        two = (MODEL, DATA)
+    else:
+        return (None,) * ndim
+    return (None,) * (ndim - 2) + two
+
+
+def _factor_pspec(shape: Tuple[int, ...], side: str,
+                  name: str) -> Tuple[Optional[str], ...]:
+    """Spec for one K-FAC factor / inverse ``(*stack, nb, bs, bs)``.
+
+    ``side``: "A"(_inv) or "G"(_inv). The block-index dim inherits the
+    mesh axis of the weight dim that side preconditions (co-designed
+    with ``soi.block_precondition``'s local einsum)."""
+    stack = shape[:-3]
+    wspec = _param_pspec(name, len(stack) + 2)
+    ax = wspec[-2] if side.startswith("A") else wspec[-1]
+    return tuple(wspec[:-2]) + (ax, None, None)
+
+
+def _sharding(mesh, spec, shape) -> NamedSharding:
+    return NamedSharding(mesh, clean_spec(spec, shape, mesh))
+
+
+def param_sharding(params: Any, mesh) -> Any:
+    """NamedSharding tree for a (possibly abstract) param pytree."""
+    def one(path, leaf):
+        return _sharding(mesh, _param_pspec(path_key(path),
+                                            len(leaf.shape)), leaf.shape)
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def kfac_sharding(kstate: Any, params: Any, mesh) -> Any:
+    """Sharding tree matching a ``KFACState``: factors/inverses follow
+    :func:`_factor_pspec`; momentum and Adam moments follow the params;
+    the step counter replicates."""
+    repl = NamedSharding(mesh, P())
+
+    def factor_tree(tree: Dict[str, Dict[str, Any]]) -> Dict:
+        out = {}
+        for name, d in tree.items():
+            out[name] = {
+                k: _sharding(mesh, _factor_pspec(v.shape, k, name),
+                             v.shape)
+                for k, v in d.items()
+            }
+        return out
+
+    p_sh = param_sharding(params, mesh)
+    return kstate._replace(
+        step=repl,
+        factors=factor_tree(kstate.factors),
+        inverses=factor_tree(kstate.inverses),
+        momentum=p_sh,
+        adam_mu=p_sh,
+        adam_nu=p_sh,
+    )
+
+
+def batch_sharding(batch: Dict[str, Any], mesh) -> Dict[str, Any]:
+    """Batch dim over (pod, data); M-RoPE ``positions`` (3, B, T) carry
+    the batch on dim 1."""
+    out = {}
+    for k, v in batch.items():
+        ndim = len(v.shape)
+        spec = [None] * ndim
+        if k == "positions" and ndim == 3:
+            spec[1] = BATCH_AXES
+        elif ndim >= 1:
+            spec[0] = BATCH_AXES
+        out[k] = _sharding(mesh, tuple(spec), v.shape)
+    return out
+
+
+def cache_sharding(cache: Any, mesh) -> Any:
+    """Decode-state sharding: KV tensors batch over (pod, data) and
+    heads over ``model``; recurrent states batch-shard; scalars
+    replicate. Handles both scan-stacked (leading layer dim) and tail
+    (unstacked) layouts."""
+    def one(path, leaf):
+        key = path_key(path)
+        base = key.rsplit("/", 1)[-1]
+        shape = leaf.shape
+        nd = len(shape)
+        spec = [None] * nd
+        if base in ("k", "v") and nd >= 4:
+            spec[nd - 4] = BATCH_AXES          # (L?, B, S, H, hd)
+            spec[nd - 2] = MODEL
+        elif base == "pos" and nd >= 2:
+            spec[nd - 2] = BATCH_AXES          # (L?, B, S)
+        elif base == "idx" or nd == 0:
+            pass
+        else:
+            # recurrent states: stacked trees carry a leading layer dim
+            stacked = key.startswith(("layers", "units"))
+            bdim = 1 if (stacked and nd >= 2) else 0
+            spec[bdim] = BATCH_AXES
+        return _sharding(mesh, tuple(spec), shape)
+
+    return jax.tree_util.tree_map_with_path(one, cache)

@@ -29,6 +29,7 @@ from repro.configs.base import ModelConfig, ShapeCfg
 from repro.core import kfac
 from repro.core.kfac import KFACConfig, KFACState
 from repro.dist import sharding as shard_rules
+from repro.dist.api import BATCH_AXES, shard_hint, shard_like_params
 from repro.models import lm, whisper
 
 
@@ -121,8 +122,6 @@ def _split_microbatches(batch, accum: int):
     Batch dim is axis 0 except M-RoPE ``positions`` (3, B, T). The
     microbatch dim keeps the (pod, data) sharding (hinted — the reshape
     is local because accum divides the per-shard row count)."""
-    from repro.dist.api import BATCH_AXES, shard_hint
-
     out = {}
     for k, v in batch.items():
         if k == "positions" and v.ndim == 3:
@@ -143,8 +142,6 @@ def make_train_step(cfg: ModelConfig, kcfg: KFACConfig) -> Callable:
     accum = max(cfg.train_accum, 1)
 
     def grads_of(params, batch):
-        from repro.dist.api import shard_like_params
-
         def loss_of(p):
             loss, _ = mod.loss_fn(cfg, p, batch)
             return loss
@@ -188,8 +185,6 @@ def make_sgd_step(cfg: ModelConfig, lr: float = 1e-2,
     mod = model_module(cfg)
 
     def sgd_step(state, batch):
-        from repro.dist.api import shard_like_params
-
         params, mom = state
 
         def loss_of(p):

@@ -1,0 +1,87 @@
+"""dist.api contract: path_key canonicalization, shard_hint's no-mesh
+identity, and factor_axes/_factor_pspec consistency (block_precondition
+and kfac_sharding must agree on which mesh axis each factor side rides,
+or the preconditioning einsum stops being shard-local)."""
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist import api
+from repro.dist.sharding import _factor_pspec, _param_pspec
+
+
+def test_path_key_dict_and_sequence_paths():
+    tree = {"a": {"b": [jnp.zeros(()), {"c": jnp.zeros(())}]},
+            "z": (jnp.zeros(()),)}
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    keys = [api.path_key(p) for p, _ in flat]
+    assert keys == ["a/b/0", "a/b/1/c", "z/0"]
+
+
+def test_path_key_matches_kfac_spec_names():
+    """The '/'-join must reproduce kfac_specs naming for a params-like
+    nest (dicts of dicts of arrays)."""
+    params = {"layers": {"attn": {"wq": jnp.zeros((2, 3))},
+                         "mlp": {"wd": jnp.zeros((3, 2))}}}
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    keys = {api.path_key(p) for p, _ in flat}
+    assert keys == {"layers/attn/wq", "layers/mlp/wd"}
+
+
+def test_shard_hint_identity_without_mesh():
+    x = jnp.arange(12.0).reshape(3, 4)
+    assert api.shard_hint(x, api.BATCH_AXES, api.MODEL) is x
+    # and under jit: same values, no constraint-related failure
+    y = jax.jit(lambda v: api.shard_hint(v, "data", None))(x)
+    assert jnp.array_equal(y, x)
+
+
+def test_shard_like_params_identity_without_mesh():
+    tree = {"embed": jnp.ones((4, 2)), "layers": {
+        "mlp": {"wg": jnp.ones((2, 2, 2))}}}
+    out = api.shard_like_params(tree)
+    assert out is tree
+
+
+def test_factor_axes_agrees_with_factor_pspec_dense():
+    """For gate/down (col/row-parallel) weights, factor_axes' (ain, gout)
+    must equal the block-dim axes _factor_pspec assigns to A and G."""
+    for name in ("layers/mlp/wg", "layers/mlp/wd", "layers/attn/wq",
+                 "layers/attn/wo"):
+        ain, gout = api.factor_axes(name)
+        a_spec = _factor_pspec((4, 8, 64, 64), "A", name)
+        g_spec = _factor_pspec((4, 8, 64, 64), "G", name)
+        assert a_spec == (None, ain, None, None), name
+        assert g_spec == (None, gout, None, None), name
+
+
+def test_factor_axes_agrees_with_factor_pspec_moe():
+    """MoE weights add the expert stack axis (over 'model') ahead of the
+    (ain, gout) pair."""
+    for name in ("layers/moe/wg", "layers/moe/wu", "layers/moe/wd"):
+        axes = api.factor_axes(name)
+        assert len(axes) == 3
+        e_ax, ain, gout = axes
+        assert e_ax == "model"
+        a_spec = _factor_pspec((4, 8, 2, 64, 64), "A", name)
+        g_spec = _factor_pspec((4, 8, 2, 64, 64), "G", name)
+        assert a_spec == (None, e_ax, ain, None, None), name
+        assert g_spec == (None, e_ax, gout, None, None), name
+
+
+def test_factor_axes_never_repeats_a_mesh_axis():
+    """A PartitionSpec may not use one mesh axis twice; the expert axis
+    and a block axis must never collide."""
+    for name in ("layers/moe/wg", "layers/moe/wu", "layers/moe/wd"):
+        for side in ("A", "G"):
+            spec = _factor_pspec((4, 8, 2, 64, 64), side, name)
+            used = [a for a in spec if a is not None]
+            assert len(used) == len(set(used)), (name, side, spec)
+
+
+def test_param_pspec_share_a_siblings_match():
+    """wk/wv share wq's A factor, so their input dims must ride the same
+    axis as wq's (the activations are physically the same tensor)."""
+    wq = _param_pspec("layers/attn/wq", 3)
+    for sib in ("layers/attn/wk", "layers/attn/wv"):
+        assert _param_pspec(sib, 3)[-2] == wq[-2]
