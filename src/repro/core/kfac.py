@@ -224,16 +224,23 @@ def apply_updates(params: Any, grads: Any, state: KFACState,
     Non-factored params (norms, embeddings, gates): Adam.
     """
     pre = precondition(grads, state, specs, cfg)
+    names = {name for name in specs}
 
-    # KL/trust-region clip: scale the whole preconditioned step so that
+    # KL/trust-region clip: scale the preconditioned step so that
     # sum(d * g) <= kl_clip (simplified from K-FAC's quadratic model).
-    dot = sum(jnp.sum(a * b) for a, b in zip(
-        jax.tree.leaves(pre), jax.tree.leaves(grads)))
+    # Only factored leaves participate: on the Adam path ``pre is g``,
+    # so including those leaves adds plain |g|^2 mass that inflates the
+    # clip and spuriously shrinks ``nu`` for the preconditioned step
+    # (the Adam update is scale-invariant in g and needs no clip).
+    leaves_pre_p, _ = jax.tree_util.tree_flatten_with_path(pre)
+    terms = [jnp.sum(d * g) for (path, d), g in zip(
+        leaves_pre_p, jax.tree.leaves(grads))
+        if path_key(path) in names]
+    dot = sum(terms) if terms else jnp.zeros((), jnp.float32)
     nu = jnp.minimum(1.0, cfg.kl_clip / (cfg.lr * jnp.abs(dot) + 1e-12))
 
     step = state.step + 1
     stepf = step.astype(jnp.float32)
-    names = {name for name in specs}
 
     flat_p = jax.tree_util.tree_flatten_with_path(params)
     leaves_p, treedef = flat_p

@@ -159,7 +159,8 @@ def cache_sharding(cache: Any, mesh) -> Any:
         elif base == "pos" and nd >= 2:
             spec[nd - 2] = BATCH_AXES          # (L?, B, S)
         elif base == "idx" or nd == 0:
-            pass
+            if nd == 1:
+                spec[0] = BATCH_AXES           # pool: per-slot lengths
         else:
             # recurrent states: stacked trees carry a leading layer dim
             stacked = key.startswith(("layers", "units"))
@@ -168,3 +169,11 @@ def cache_sharding(cache: Any, mesh) -> Any:
         return _sharding(mesh, tuple(spec), shape)
 
     return jax.tree_util.tree_map_with_path(one, cache)
+
+
+def pool_sharding(pool: Any, mesh) -> Any:
+    """Serving slot-pool sharding (repro.serve.pool): the slot axis IS
+    the cache batch axis, so the pool shards exactly like a decode
+    cache — KV slots over (pod, data), heads over ``model`` — plus the
+    per-slot length vector (``idx``, (max_slots,)) over (pod, data)."""
+    return cache_sharding(pool, mesh)

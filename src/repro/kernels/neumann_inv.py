@@ -147,8 +147,17 @@ def neumann_inv(
     nb, n, _ = a.shape
     n_pad = max(128, (-(-n // 128)) * 128)
     a_p = _pad_block(a.astype(jnp.float32), n_pad)
-    damp = jnp.broadcast_to(
-        jnp.asarray(damping, jnp.float32).reshape(nb, 1), (nb, 1))
+    damp = jnp.asarray(damping, jnp.float32)
+    if damp.size == 1:
+        # scalar damping: one Tikhonov level for every block (the
+        # docstring's per-block-or-scalar contract; a bare reshape to
+        # (nb, 1) crashes for nb > 1)
+        damp = jnp.broadcast_to(damp.reshape(()), (nb,))
+    elif damp.shape != (nb,):
+        raise ValueError(
+            f"damping must be a scalar or shape ({nb},) to match the "
+            f"{nb} blocks; got shape {damp.shape}")
+    damp = damp.reshape(nb, 1)
 
     out = pl.pallas_call(
         functools.partial(_kernel, n=n_pad, ns_iters=ns_iters,

@@ -225,12 +225,39 @@ def attention(q: jax.Array, k: jax.Array, v: jax.Array,
 
 
 def kv_cache_update(cache_k, cache_v, k, v, idx):
-    """Insert k/v (B, t, Hkv, hd) at position idx into (B, S, Hkv, hd)."""
+    """Insert k/v (B, t, Hkv, hd) at position idx into (B, S, Hkv, hd).
+
+    ``idx`` is either a scalar (all rows write the same column — the
+    static decode path) or a (B,) vector of per-row columns with t == 1
+    (the continuous-batching slot pool, where every slot sits at its own
+    sequence position). Vector rows with ``idx >= S`` write nothing."""
+    idx = jnp.asarray(idx)
+    if idx.ndim == 1:
+        # per-row scatter (in-place under donation): O(B * Hkv * hd)
+        # per step, not a full-cache select
+        rows = jnp.arange(cache_k.shape[0])
+        ck = cache_k.at[rows, idx].set(
+            k[:, 0].astype(cache_k.dtype), mode="drop")
+        cv = cache_v.at[rows, idx].set(
+            v[:, 0].astype(cache_v.dtype), mode="drop")
+        return ck, cv
     ck = jax.lax.dynamic_update_slice(cache_k, k.astype(cache_k.dtype),
                                       (0, idx, 0, 0))
     cv = jax.lax.dynamic_update_slice(cache_v, v.astype(cache_v.dtype),
                                       (0, idx, 0, 0))
     return ck, cv
+
+
+def pos_cache_update(cache_pos, q_pos, idx):
+    """Insert positions (B, t) at column idx into the (B, S) pos track,
+    with the same scalar/vector ``idx`` contract as kv_cache_update."""
+    idx = jnp.asarray(idx)
+    if idx.ndim == 1:
+        rows = jnp.arange(cache_pos.shape[0])
+        return cache_pos.at[rows, idx].set(
+            q_pos[:, 0].astype(cache_pos.dtype), mode="drop")
+    return jax.lax.dynamic_update_slice(
+        cache_pos, q_pos.astype(cache_pos.dtype), (0, idx))
 
 
 # ---------------------------------------------------------------------------

@@ -37,6 +37,7 @@ from repro.models.layers import (
     cast,
     dense,
     kv_cache_update,
+    pos_cache_update,
     rms_norm,
     shard_acts,
     swiglu,
@@ -193,12 +194,12 @@ def _attn_block(cfg, p, x, positions, ctx, prefix, *, window=0,
         cpos = jnp.roll(q_pos[:, -S:].astype(jnp.int32), shift, axis=1)
         new_cache = {"k": ck, "v": cv, "pos": cpos}
     elif cache is not None:
-        # write this step's k/v at slot idx (ring-buffered for windows)
+        # write this step's k/v at slot idx (ring-buffered for windows;
+        # idx may be a (B,) per-slot vector on the serving pool path)
         S = cache["k"].shape[1]
         slot = idx % S if window else idx
         ck, cv = kv_cache_update(cache["k"], cache["v"], k, v, slot)
-        cpos = jax.lax.dynamic_update_slice(
-            cache["pos"], q_pos.astype(jnp.int32), (0, slot))
+        cpos = pos_cache_update(cache["pos"], q_pos, slot)
         kv_pos = cpos
         k_all, v_all = ck.astype(q.dtype), cv.astype(q.dtype)
         new_cache = {"k": ck, "v": cv, "pos": cpos}
@@ -378,11 +379,16 @@ def _scan_layers(cfg, params, x, positions, taps, collect, cache, idx,
 
 
 def forward(cfg, params, batch, taps=None, collect=False, cache=None,
-            train=False, last_only=False):
+            train=False, last_only=False, last_pos=None):
     """Returns (logits, stats, new_cache). ``last_only`` computes the
     vocab projection for the final position only (prefill: the other
     T-1 logits are dead code and the vocab matmul dominates prefill
-    FLOPs for small models — EXPERIMENTS.md §Perf)."""
+    FLOPs for small models — EXPERIMENTS.md §Perf). ``last_pos`` (B,)
+    generalizes it to a per-row gather position (bucketed prefill, where
+    the last real token sits before the padded tail).
+
+    ``cache["idx"]`` is a scalar for static decode, or a (B,) per-slot
+    length vector for the serving pool (repro.serve)."""
     idx = cache["idx"] if cache is not None else None
     if "positions" in batch:
         positions = batch["positions"]
@@ -390,7 +396,7 @@ def forward(cfg, params, batch, taps=None, collect=False, cache=None,
         B, T = batch["tokens"].shape
         base = jnp.arange(T, dtype=jnp.int32)[None, :]
         if idx is not None:
-            base = base + idx
+            base = base + (idx[:, None] if idx.ndim == 1 else idx)
         positions = jnp.broadcast_to(base, (B, T))
 
     x = _embed(cfg, params, batch, positions)
@@ -399,6 +405,9 @@ def forward(cfg, params, batch, taps=None, collect=False, cache=None,
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
     if last_only:
         x = x[:, -1:]
+    elif last_pos is not None:
+        x = jnp.take_along_axis(
+            x, last_pos[:, None, None].astype(jnp.int32), axis=1)
     logits = _logits(cfg, params, x)
     if new_cache is not None:
         new_cache["idx"] = idx + batch["tokens"].shape[1]
@@ -468,10 +477,15 @@ def init_cache(cfg, batch: int, seq_len: int, dtype=jnp.bfloat16) -> Dict:
     return {"layers": layers, "idx": jnp.zeros((), jnp.int32)}
 
 
-def prefill(cfg, params, batch, cache):
-    """Process a prompt; returns (last-token logits, cache)."""
-    logits, _, cache = forward(cfg, params, batch, cache=cache,
-                               last_only=True)
+def prefill(cfg, params, batch, cache, length=None):
+    """Process a prompt; returns (last-token logits, cache).
+
+    ``length`` (B,) gives the real prompt length per row when the
+    prompt is right-padded to a bucket size (serving engine): logits are
+    gathered at the last *real* token instead of the padded tail."""
+    logits, _, cache = forward(
+        cfg, params, batch, cache=cache, last_only=length is None,
+        last_pos=None if length is None else jnp.asarray(length) - 1)
     return logits[:, -1], cache
 
 
@@ -479,6 +493,21 @@ def decode_step(cfg, params, token, cache):
     """One decode step. ``token``: (B, 1) int32."""
     logits, _, cache = forward(cfg, params, {"tokens": token}, cache=cache)
     return logits[:, -1], cache
+
+
+def cache_write_slot(cache, slot, row_cache, length):
+    """Insert a single-request prefill cache into slot ``slot`` of a
+    serving pool (a cache whose batch dim is slots and whose ``idx`` is
+    a per-slot length vector — see repro.serve.pool)."""
+    from repro.serve.pool import write_slot
+    return write_slot(cache, slot, row_cache, length)
+
+
+def cache_reset_slot(cache, slot):
+    """Free slot ``slot``: length 0, positions -> far-future sentinel,
+    recurrent state -> 0 (see repro.serve.pool)."""
+    from repro.serve.pool import reset_slot
+    return reset_slot(cache, slot)
 
 
 # ---------------------------------------------------------------------------

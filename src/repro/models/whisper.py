@@ -29,6 +29,7 @@ from repro.models.layers import (
     gelu,
     kv_cache_update,
     layer_norm,
+    pos_cache_update,
     shard_acts,
 )
 
@@ -120,8 +121,7 @@ def _mha(cfg, p, xq, xkv, ctx, prefix, causal, q_pos, kv_pos,
     new_cache = None
     if cache is not None:
         ck, cv = kv_cache_update(cache["k"], cache["v"], k, v, idx)
-        cpos = jax.lax.dynamic_update_slice(
-            cache["pos"], q_pos.astype(jnp.int32), (0, idx))
+        cpos = pos_cache_update(cache["pos"], q_pos, idx)
         k, v, kv_pos = ck.astype(q.dtype), cv.astype(q.dtype), cpos
         new_cache = {"k": ck, "v": cv, "pos": cpos}
     out = attention(q, k, v, q_pos, kv_pos, causal=causal,
@@ -179,16 +179,19 @@ def _mha_kv(cfg, p, xkv, ctx, prefix):
 
 
 def decode(cfg, params, tokens, enc_out, taps=None, collect=False,
-           cache=None, last_only=False):
+           cache=None, last_only=False, last_pos=None):
     """Decoder pass. tokens: (B, T). Returns (logits, stats, new_cache).
     ``last_only`` projects only the final position onto the vocab
-    (prefill path — see models/lm.forward)."""
+    (prefill path — see models/lm.forward); ``last_pos`` (B,) is the
+    per-row variant (bucketed prefill). ``cache["idx"]`` may be a (B,)
+    per-slot length vector on the serving-pool path."""
     B, T = tokens.shape
     D = cfg.d_model
     dt = jnp.dtype(cfg.dtype)
     idx = cache["idx"] if cache is not None else None
     base = jnp.arange(T, dtype=jnp.int32)[None, :]
-    pos = jnp.broadcast_to(base + (idx if idx is not None else 0), (B, T))
+    off = 0 if idx is None else (idx[:, None] if idx.ndim == 1 else idx)
+    pos = jnp.broadcast_to(base + off, (B, T))
     x = (cast(params["embed"], dt)[tokens].astype(jnp.float32)
          + _sinusoid(pos, D)).astype(dt)
     x = shard_acts(x)
@@ -231,6 +234,9 @@ def decode(cfg, params, tokens, enc_out, taps=None, collect=False,
     x = layer_norm(x, params["dec_ln_f"]["w"], params["dec_ln_f"]["b"])
     if last_only:
         x = x[:, -1:]
+    elif last_pos is not None:
+        x = jnp.take_along_axis(
+            x, last_pos[:, None, None].astype(jnp.int32), axis=1)
     # vocab padded to a shardable multiple of 128 (whisper's 51865 is
     # not 16-divisible => unsharded logits dominate HBM otherwise);
     # padded columns masked so loss/argmax are unchanged
@@ -295,8 +301,9 @@ def init_cache(cfg, batch: int, self_len: int, enc_len: int,
             "idx": jnp.zeros((), jnp.int32)}
 
 
-def prefill(cfg, params, batch, cache):
-    """Encode frames + prefill the decoder prompt."""
+def prefill(cfg, params, batch, cache, length=None):
+    """Encode frames + prefill the decoder prompt. ``length`` (B,) gives
+    per-row real prompt lengths for bucket-padded prompts (serving)."""
     enc_out, _ = encode(cfg, params, batch["enc_embeds"])
 
     # precompute cross k/v per decoder layer into the cache
@@ -311,8 +318,10 @@ def prefill(cfg, params, batch, cache):
     layers["cross_v"] = cvs.astype(cache["layers"]["cross_v"].dtype)
     cache["layers"] = layers
 
-    logits, _, cache = decode(cfg, params, batch["tokens"], enc_out,
-                              cache=cache, last_only=True)
+    logits, _, cache = decode(
+        cfg, params, batch["tokens"], enc_out, cache=cache,
+        last_only=length is None,
+        last_pos=None if length is None else jnp.asarray(length) - 1)
     return logits[:, -1], cache
 
 
@@ -323,6 +332,19 @@ def decode_step(cfg, params, token, cache):
                           jnp.dtype(cfg.dtype))
     logits, _, cache = decode(cfg, params, token, dummy_enc, cache=cache)
     return logits[:, -1], cache
+
+
+def cache_write_slot(cache, slot, row_cache, length):
+    """Insert a single-request prefill cache (self + cross KV) into slot
+    ``slot`` of a serving pool (see repro.serve.pool)."""
+    from repro.serve.pool import write_slot
+    return write_slot(cache, slot, row_cache, length)
+
+
+def cache_reset_slot(cache, slot):
+    """Free slot ``slot`` of a serving pool (see repro.serve.pool)."""
+    from repro.serve.pool import reset_slot
+    return reset_slot(cache, slot)
 
 
 def kfac_specs(cfg) -> Dict[str, LinearSpec]:

@@ -137,7 +137,7 @@ class TrainLoop:
                     state, metrics = step_fn(state, batch)
                     jax.block_until_ready(
                         jax.tree.leaves(metrics)[0])
-            except (StepDeadlineExceeded, Exception) as e:  # noqa: BLE001
+            except Exception as e:  # noqa: BLE001
                 if not _recoverable(e):
                     raise
                 failures += 1
@@ -151,10 +151,11 @@ class TrainLoop:
                 exclude += getattr(e, "lost", 0)
                 mesh, state, cursor, step_fn = self._start(exclude)
                 # fresh timing window: the first post-restore step
-                # recompiles and must not trip the hang deadline
-                self.watchdog = StepWatchdog(
-                    straggler_factor=self.cfg.straggler_factor,
-                    hard_deadline_s=self.cfg.hard_deadline_s)
+                # recompiles and must not trip the hang deadline.
+                # Cumulative counters (n_steps / n_stragglers) survive —
+                # replacing the watchdog here used to zero them, so the
+                # final report undercounted stragglers after a recovery.
+                self.watchdog.reset_window()
                 continue
 
             failures = 0
@@ -185,11 +186,44 @@ class TrainLoop:
         }
 
 
+#: XLA runtime status markers that indicate a sick device / lost data
+#: rather than a programming error (absl status codes as surfaced in
+#: XlaRuntimeError messages, plus the legacy CamelCase spellings).
+_XLA_RECOVERABLE_MARKERS = (
+    "RESOURCE_EXHAUSTED", "ResourceExhausted",
+    "DATA_LOSS", "DataLoss",
+    "UNAVAILABLE", "Unavailable",
+    "ABORTED", "Aborted",
+)
+
+
+def _xla_runtime_error_types():
+    """The XLA runtime exception class(es) for this jax version."""
+    types = []
+    err = getattr(jax, "errors", None)
+    if err is not None and hasattr(err, "JaxRuntimeError"):
+        types.append(err.JaxRuntimeError)
+    try:
+        from jax._src.lib import xla_client
+        types.append(xla_client.XlaRuntimeError)
+    except Exception:  # pragma: no cover - very old/new jax
+        pass
+    return tuple(types)
+
+
 def _recoverable(e: BaseException) -> bool:
+    """Only explicitly-known failure classes trigger checkpoint-restore.
+
+    The old heuristic ("device" AND "error" anywhere in the message)
+    classified ordinary programming errors as recoverable and silently
+    looped checkpoint-restore over real bugs. Now: the repo's own fault
+    types, or an XLA *runtime* error carrying a known sick-device status
+    marker. Everything else re-raises to the caller."""
     from repro.runtime.elastic import DeviceLoss
 
     if isinstance(e, (DeviceLoss, StepDeadlineExceeded)):
         return True
-    # XLA surface for real device failure
-    return "RESOURCE_EXHAUSTED" in str(e) or "DataLoss" in str(e) \
-        or "device" in str(e).lower() and "error" in str(e).lower()
+    if not isinstance(e, _xla_runtime_error_types()):
+        return False
+    msg = str(e)
+    return any(m in msg for m in _XLA_RECOVERABLE_MARKERS)

@@ -55,6 +55,15 @@ class StepWatchdog:
             return None
         return statistics.median(self.times)
 
+    def reset_window(self) -> None:
+        """Clear the healthy-time window (e.g. after a recovery, where
+        the first step recompiles and must not trip the hang deadline)
+        while keeping the cumulative ``n_steps``/``n_stragglers``
+        counters — the train loop's final report sums over the whole
+        run, recoveries included."""
+        self.times.clear()
+        self.last_was_straggler = False
+
     def _deadline(self) -> Optional[float]:
         med = self.median()
         cands = []

@@ -1,0 +1,25 @@
+"""Continuous-batching serving engine (slot pool + scheduler + jitted
+decode loop). See repro/serve/engine.py for the architecture."""
+
+from repro.serve.engine import (
+    EngineConfig,
+    FinishedRequest,
+    Request,
+    Scheduler,
+    ServeEngine,
+    default_buckets,
+    synthetic_trace,
+)
+from repro.serve.pool import (
+    empty_row_like,
+    init_pool,
+    reset_slot,
+    write_slot,
+)
+from repro.serve.sampling import make_sampler
+
+__all__ = [
+    "EngineConfig", "FinishedRequest", "Request", "Scheduler",
+    "ServeEngine", "default_buckets", "empty_row_like", "init_pool",
+    "reset_slot", "synthetic_trace", "write_slot", "make_sampler",
+]

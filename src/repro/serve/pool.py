@@ -1,0 +1,121 @@
+"""Slot-based KV pool for continuous-batching serving.
+
+The pool is an ordinary model decode cache whose batch dimension is
+reinterpreted as *slots*: ``(max_slots, ...)`` arrays plus a per-slot
+length vector in place of the scalar ``idx``. Models already mask
+attention by per-row cached positions (unwritten columns carry a
+far-future ``pos``), so per-slot variable lengths ride on the existing
+machinery — the only model-side additions are the vector-``idx`` decode
+path and per-row ``kv_cache_update`` (models/layers.py).
+
+Lifecycle (driven by :mod:`repro.serve.engine`):
+
+* :func:`init_pool`      — allocate the ``(max_slots, S, ...)`` pool;
+* :func:`write_slot`     — copy a single-request prefill cache (batch=1,
+  same ``S``) into one slot, re-masking padded prompt columns, without
+  recompiling anything (all ops are dynamic-slice updates);
+* :func:`reset_slot`     — return a slot to the empty state (pos ->
+  far-future, recurrent state -> 0, length -> 0) so a finished request
+  frees its slot for the next admission.
+
+Everything here is jit-compatible with a traced ``slot``/``length``, so
+the engine compiles each of insert/reset exactly once.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.api import path_key
+
+#: far-future sentinel position: the causal mask (q_pos >= kv_pos)
+#: excludes cache columns carrying it (models init their caches with it)
+UNWRITTEN_POS = 2 ** 30
+
+
+def slot_dim(key: str, ndim: int) -> int:
+    """Batch/slot dimension of a cache leaf at pytree path ``key``
+    (mirrors dist.sharding.cache_sharding's layout knowledge)."""
+    base = key.rsplit("/", 1)[-1]
+    if base in ("k", "v") and ndim >= 4:
+        return ndim - 4                    # (L?, B, S, H, hd)
+    if base == "pos" and ndim >= 2:
+        return ndim - 2                    # (L?, B, S)
+    if base == "idx":
+        return 0                           # (B,) per-slot lengths
+    # recurrent states: scan-stacked trees carry a leading layer dim
+    stacked = key.startswith(("layers", "units"))
+    return 1 if (stacked and ndim >= 2) else 0
+
+
+def init_pool(cfg, max_slots: int, max_len: int,
+              enc_len: Optional[int] = None) -> Any:
+    """A decode cache with ``max_slots`` slots of ``max_len`` columns and
+    a per-slot length vector at ``"idx"``."""
+    from repro.launch import steps as steps_mod
+
+    mod = steps_mod.model_module(cfg)
+    if cfg.family == "audio":
+        cache = mod.init_cache(cfg, max_slots, max_len,
+                               enc_len or max_len)
+    else:
+        cache = mod.init_cache(cfg, max_slots, max_len)
+    cache["idx"] = jnp.zeros((max_slots,), jnp.int32)
+    return cache
+
+
+def empty_row_like(pool: Any) -> Any:
+    """A single-slot 'empty' cache row matching ``pool``: zeros
+    everywhere except ``pos`` tracks, which carry the far-future
+    sentinel (same content as a fresh ``init_cache`` row)."""
+    def one(path, leaf):
+        key = path_key(path)
+        if key == "idx":
+            return jnp.zeros((), leaf.dtype)
+        shape = list(leaf.shape)
+        shape[slot_dim(key, leaf.ndim)] = 1
+        fill = UNWRITTEN_POS if key.rsplit("/", 1)[-1] == "pos" else 0
+        return jnp.full(tuple(shape), fill, leaf.dtype)
+
+    return jax.tree_util.tree_map_with_path(one, pool)
+
+
+def write_slot(pool: Any, slot, row: Any, length) -> Any:
+    """Insert the single-request cache ``row`` (batch dim = 1, same
+    column count as the pool) into slot ``slot``.
+
+    ``length`` is the request's real (unpadded) prompt length: ``pos``
+    columns at or beyond it are re-masked to the far-future sentinel so
+    bucket-padding junk written during prefill is never attended, and
+    the slot's length vector entry is set to ``length`` (a right-padded
+    prefill leaves ``row["idx"] == padded_len``, which must not leak).
+    ``slot``/``length`` may be traced scalars (single jit)."""
+    length = jnp.asarray(length, jnp.int32)
+
+    def one(path, dst, src):
+        key = path_key(path)
+        if key == "idx":
+            return jax.lax.dynamic_update_slice(
+                dst, length[None].astype(dst.dtype), (slot,))
+        d = slot_dim(key, dst.ndim)
+        if key.rsplit("/", 1)[-1] == "pos":
+            cols = jnp.arange(src.shape[-1])
+            src = jnp.where(cols < length, src, UNWRITTEN_POS)
+        start = [0] * dst.ndim
+        start[d] = slot
+        return jax.lax.dynamic_update_slice(
+            dst, src.astype(dst.dtype), tuple(start))
+
+    return jax.tree_util.tree_map_with_path(one, pool, row)
+
+
+def reset_slot(pool: Any, slot, empty_row: Optional[Any] = None) -> Any:
+    """Free slot ``slot``: restore the empty-cache row (length 0, pos ->
+    far-future, recurrent state -> 0). Pass a precomputed
+    :func:`empty_row_like` to avoid rebuilding it per call."""
+    if empty_row is None:
+        empty_row = empty_row_like(pool)
+    return write_slot(pool, slot, empty_row, 0)

@@ -1,0 +1,47 @@
+"""On-device token sampling for the serving engine.
+
+One sampler closure per (method, temperature, top_k) triple — static
+arguments, so the jitted decode loop embeds the sampler with no
+host-side branching. All samplers map (B, vocab) float logits + a PRNG
+key to (B,) int32 tokens and are safe inside ``lax.scan``.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+METHODS = ("greedy", "temperature", "top_k")
+
+
+def make_sampler(method: str = "greedy", temperature: float = 1.0,
+                 top_k: int = 0) -> Callable:
+    """Returns ``sample(logits, key) -> (B,) int32``.
+
+    * ``greedy``      — argmax (key ignored; kept for a uniform signature)
+    * ``temperature`` — categorical over ``logits / temperature``
+    * ``top_k``       — restrict to the ``top_k`` highest logits, then
+      temperature-categorical over the survivors
+    """
+    if method not in METHODS:
+        raise ValueError(f"unknown sampling method {method!r}; "
+                         f"one of {METHODS}")
+    if method != "greedy" and temperature <= 0.0:
+        raise ValueError("temperature must be > 0 for stochastic "
+                         "sampling (use method='greedy' instead)")
+    if method == "top_k" and top_k < 1:
+        raise ValueError("top_k sampling needs top_k >= 1")
+
+    def sample(logits: jax.Array, key: jax.Array) -> jax.Array:
+        lg = logits.astype(jnp.float32)
+        if method == "greedy":
+            return jnp.argmax(lg, axis=-1).astype(jnp.int32)
+        if method == "top_k":
+            kth = jax.lax.top_k(lg, top_k)[0][..., -1:]
+            lg = jnp.where(lg >= kth, lg, -jnp.inf)
+        return jax.random.categorical(
+            key, lg / temperature, axis=-1).astype(jnp.int32)
+
+    return sample

@@ -141,6 +141,30 @@ def test_neumann_inv_property(n, nb, seed):
     assert np.max(np.abs(resid)) < 1e-3
 
 
+def test_neumann_inv_scalar_damping_broadcasts():
+    """The docstring's per-block-or-scalar contract: a python float /
+    0-d damping must broadcast over nb > 1 blocks (a bare reshape to
+    (nb, 1) used to crash) and match the per-block spelling."""
+    r = _rng(21)
+    nb, n = 3, 64
+    a = _spd(r, nb, n)
+    kw = dict(ns_iters=20, taylor_terms=4, refine_steps=2)
+    got = np.asarray(neumann_inv(a, 0.1, **kw))
+    want = np.asarray(neumann_inv(a, np.full((nb,), 0.1, np.float32),
+                                  **kw))
+    np.testing.assert_allclose(got, want, rtol=0, atol=1e-6)
+    exact = np.linalg.inv(a + 0.1 * np.eye(n, dtype=np.float32))
+    np.testing.assert_allclose(got, exact, rtol=0, atol=1e-3)
+
+
+def test_neumann_inv_rejects_wrong_damping_shape():
+    r = _rng(22)
+    a = _spd(r, 2, 64)
+    with pytest.raises(ValueError, match="damping"):
+        neumann_inv(a, np.ones((3,), np.float32), ns_iters=4,
+                    taylor_terms=2, refine_steps=1)
+
+
 # ---------------------------------------------------------------------------
 # fused_gram_inv
 # ---------------------------------------------------------------------------

@@ -180,6 +180,43 @@ def test_apply_updates_decreases_quadratic():
     assert float(loss(p2)) < float(loss(p2_sgd))
 
 
+def test_trust_region_ignores_adam_path_leaves():
+    """The kl clip's ``sum(pre * grads)`` must run over factored leaves
+    only: on the Adam path ``pre is g``, so a large non-factored
+    gradient used to inflate the dot and spuriously shrink ``nu`` for
+    the preconditioned step (regression)."""
+    r = np.random.default_rng(7)
+    n = 8
+    cfg = KFACConfig(lr=1.0, momentum=0.0, damping=1e-4, block_size=n,
+                     kl_clip=1e-3, weight_decay=0.0)
+    specs = {"w": LinearSpec(d_in=n, d_out=n)}
+    w = jnp.asarray(r.standard_normal((n, n)), jnp.float32)
+    gw = jnp.asarray(r.standard_normal((n, n)), jnp.float32)
+
+    def factored_update(bias_grad_scale):
+        params = {"w": w, "b": jnp.zeros((n,), jnp.float32)}
+        grads = {"w": gw,
+                 "b": jnp.full((n,), bias_grad_scale, jnp.float32)}
+        # init's inverses are identity blocks => pre["w"] == gw exactly
+        state = kfac.init(params, specs, cfg)
+        p2, _ = kfac.apply_updates(params, grads, state, specs, cfg)
+        return np.asarray(p2["w"])
+
+    # the factored step must not depend on the Adam-path gradient scale
+    # (pre-fix, the 1e4 bias gradient shrank nu by ~7 orders)
+    np.testing.assert_allclose(factored_update(0.0),
+                               factored_update(1e4), rtol=1e-6)
+
+    # and the clip itself still engages on the factored dot:
+    # nu = kl_clip / (lr * |gw|^2) < 1 here, update = -lr * nu * gw
+    dot = float(jnp.sum(gw * gw))
+    nu = min(1.0, cfg.kl_clip / (cfg.lr * abs(dot) + 1e-12))
+    assert nu < 1.0
+    np.testing.assert_allclose(
+        factored_update(0.0), np.asarray(w - cfg.lr * nu * gw),
+        rtol=1e-5)
+
+
 # ---------------------------------------------------------------------------
 # pimsim vs the paper's closed forms
 # ---------------------------------------------------------------------------

@@ -142,3 +142,107 @@ def test_loop_gives_up_after_max_failures(tmp_path):
 
     with pytest.raises(DeviceLoss):
         _run(tmp_path, inject=inject)
+
+
+# ---------------------------------------------------------------------------
+# recovery classification: only known failure classes restore
+# ---------------------------------------------------------------------------
+
+def test_recoverable_classification_table():
+    from repro.runtime.loop import _recoverable
+
+    try:
+        from jax._src.lib import xla_client
+        XlaErr = xla_client.XlaRuntimeError
+    except Exception:
+        XlaErr = None
+
+    # the repo's own fault types restore
+    assert _recoverable(DeviceLoss(0, "drill"))
+    assert _recoverable(StepDeadlineExceeded("hang"))
+    # ordinary programming errors must re-raise, even when their
+    # message happens to contain both "device" and "error" (the old
+    # heuristic looped checkpoint-restore over these)
+    assert not _recoverable(ValueError(
+        "device mesh error: axis 'model' not found"))
+    assert not _recoverable(TypeError("cannot add device error type"))
+    assert not _recoverable(KeyError("layers/0/attn"))
+    # sick-device markers only count on XLA runtime errors
+    assert not _recoverable(RuntimeError("RESOURCE_EXHAUSTED: fake"))
+    if XlaErr is not None:
+        assert _recoverable(XlaErr(
+            "RESOURCE_EXHAUSTED: out of memory allocating 1g"))
+        assert _recoverable(XlaErr("DATA_LOSS: checkpoint shard lost"))
+        assert _recoverable(XlaErr("UNAVAILABLE: slice health check"))
+        assert not _recoverable(XlaErr(
+            "INVALID_ARGUMENT: mismatched shapes"))
+
+
+def test_loop_raises_on_programming_error(tmp_path):
+    """A bug whose message contains 'device'+'error' must surface, not
+    spin the restore loop (regression for the old heuristic)."""
+    from repro.data import SyntheticTokens
+    from repro.runtime import LoopConfig, TrainLoop
+
+    def inject(step):
+        if step == 2:
+            raise ValueError("device layout error: bad spec")
+
+    ds = SyntheticTokens(vocab=97, seq_len=8, global_batch=4, seed=3)
+    loop = TrainLoop(
+        LoopConfig(total_steps=8, ckpt_dir=str(tmp_path / "ck"),
+                   ckpt_every=4, log_every=1, max_failures=3),
+        ToyProgram(), ds, inject=inject)
+    with pytest.raises(ValueError):
+        loop.run()
+    # and it must fail fast: zero checkpoint-restore cycles burned
+    assert loop.n_recoveries == 0
+
+
+# ---------------------------------------------------------------------------
+# straggler accounting survives recovery
+# ---------------------------------------------------------------------------
+
+def test_watchdog_reset_window_keeps_counters():
+    wd = StepWatchdog(straggler_factor=2.0, warmup_steps=1, window=8)
+    for _ in range(3):
+        with wd.step():
+            time.sleep(0.01)
+    with wd.step():
+        time.sleep(0.05)
+    assert wd.n_stragglers == 1
+    n_steps = wd.n_steps
+    wd.reset_window()
+    # cumulative counters survive; the timing window (and thus the
+    # deadline) is back in warmup so a slow recompile step cannot trip
+    assert wd.n_stragglers == 1
+    assert wd.n_steps == n_steps
+    assert wd.median() is None
+    with wd.step():
+        time.sleep(0.05)             # slow, but window is warming up
+    assert wd.n_stragglers == 1
+
+
+def test_loop_straggler_count_survives_recovery(tmp_path):
+    """The final report must accumulate straggler counts across
+    recoveries (a fresh watchdog used to zero them)."""
+    fired = []
+
+    def inject(step):
+        if step == 5 and not fired:
+            fired.append(step)
+            raise DeviceLoss(0, "drill")
+
+    from repro.data import SyntheticTokens
+    from repro.runtime import LoopConfig, TrainLoop
+
+    ds = SyntheticTokens(vocab=97, seq_len=8, global_batch=4, seed=3)
+    loop = TrainLoop(
+        LoopConfig(total_steps=10, ckpt_dir=str(tmp_path / "ck"),
+                   ckpt_every=4, log_every=1, max_failures=3),
+        ToyProgram(), ds, inject=inject)
+    # simulate stragglers observed before the failure
+    loop.watchdog.n_stragglers = 2
+    summary = loop.run()
+    assert summary["recoveries"] == 1
+    assert summary["stragglers"] >= 2
