@@ -1,0 +1,168 @@
+"""Distributed SOI inversion: per-device inverse work vs mesh size.
+
+The paper's scaling claim for the INV engine (Sec. IV-B): inversion
+latency shrinks with the number of INV crossbar groups because factor
+blocks are distributed across them. The TPU analogue is
+``repro.solve``: on an ``ndev``-device mesh each device inverts only
+its plan-owned blocks, so per-device inverted-block count drops from
+``total`` (replicated ``kfac.refresh_inverses``) to
+``<= ceil(total/ndev)``.
+
+Run: PYTHONPATH=src python -m benchmarks.dist_inverse
+(spawns a child with a forced 4-device host platform, like
+benchmarks/grad_compression.py; REPRO_DI_DEVICES / REPRO_DI_ARCH tune
+the probe). The child asserts numerical parity of the two paths and
+the per-device block-count bound; the parent prints the CSV.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+from benchmarks.common import print_csv
+
+_CHILD = r"""
+import os
+_NDEV = int(os.environ.get("REPRO_DI_DEVICES", "4"))
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=%d" % _NDEV)
+import json
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+import repro.compat
+from repro.configs import get_smoke_config
+from repro.core.kfac import KFACConfig
+from repro.launch import steps as steps_mod
+from repro.solve import invert_factor_tree, make_plan
+
+arch = os.environ.get("REPRO_DI_ARCH", "qwen1.5-0.5b")
+cfg = get_smoke_config(arch)
+kcfg = KFACConfig(block_size=64, ns_iters=8, taylor_terms=3,
+                  refine_steps=1)
+specs = steps_mod.kfac_specs(cfg)
+
+from repro.core import soi
+shapes = jax.eval_shape(lambda: soi.init_factors(specs, kcfg.block_size))
+
+r = np.random.default_rng(0)
+
+
+def spd(s):
+    bs = s.shape[-1]
+    a = r.standard_normal(s.shape[:-1] + (2 * bs,)).astype(np.float32)
+    g = np.einsum("...ij,...kj->...ik", a, a) / (2 * bs)
+    return jnp.asarray(g)
+
+
+factors = jax.tree.map(spd, shapes)
+
+# 2D mesh when the forced pool splits evenly, flat data mesh otherwise
+# (REPRO_DI_DEVICES=1 or odd counts)
+if _NDEV > 1 and _NDEV % 2 == 0:
+    mesh_shape, mesh_axes = (2, _NDEV // 2), ("data", "model")
+else:
+    mesh_shape, mesh_axes = (_NDEV,), ("data",)
+mesh = jax.make_mesh(
+    mesh_shape, mesh_axes,
+    axis_types=(jax.sharding.AxisType.Auto,) * len(mesh_shape))
+plan = make_plan(factors, _NDEV, kcfg)
+
+rep = jax.jit(lambda f: invert_factor_tree(f, kcfg))
+dist = jax.jit(lambda f: invert_factor_tree(f, kcfg, mesh=mesh,
+                                            plan=plan))
+
+
+def timed(fn, *a):
+    out = fn(*a)
+    jax.block_until_ready(jax.tree.leaves(out)[0])
+    best = float("inf")
+    for _ in range(3):
+        t0 = time.monotonic()
+        out = fn(*a)
+        jax.block_until_ready(jax.tree.leaves(out)[0])
+        best = min(best, time.monotonic() - t0)
+    return out, best * 1e3
+
+
+inv_rep, ms_rep = timed(rep, factors)
+with jax.set_mesh(mesh):
+    inv_dist, ms_dist = timed(dist, factors)
+
+# numerical parity (bitwise on the default composed method)
+ra = jax.tree.leaves(inv_rep)
+da = jax.tree.leaves(inv_dist)
+assert all(bool((np.asarray(x) == np.asarray(y)).all())
+           for x, y in zip(ra, da)), "distributed != replicated"
+
+s = plan.summary()
+# count bound: ceil(total/ndev) holds when every block costs the same
+# (single block size -> the greedy round-robins); with mixed sizes LPT
+# balances FLOPs instead and only the per-group ceiling sum is
+# guaranteed (partition.py docstring)
+uniform = len({g.bs for g in plan.groups}) == 1
+if uniform:
+    bound = -(-plan.total_blocks // _NDEV)
+else:
+    bound = sum(-(-g.n_blocks // _NDEV) for g in plan.groups)
+assert plan.max_device_blocks <= bound, s
+print(json.dumps({
+    "arch": arch, "ndev": _NDEV,
+    "total_blocks": s["total_blocks"],
+    "device_blocks": s["device_blocks"],
+    "device_gflops": s["device_gflops"],
+    "count_bound": bound,
+    "uniform_bs": uniform,
+    "ms_replicated": round(ms_rep, 2),
+    "ms_distributed": round(ms_dist, 2),
+    "bitwise_equal": True,
+}))
+"""
+
+
+def rows():
+    ndev = int(os.environ.get("REPRO_DI_DEVICES", "4"))
+    proc = subprocess.run(
+        [sys.executable, "-c", _CHILD], capture_output=True, text=True,
+        timeout=1800,
+        env={**os.environ, "PYTHONPATH": os.path.join(
+            os.path.dirname(__file__), "..", "src")})
+    if proc.returncode != 0:
+        raise RuntimeError(proc.stderr[-2000:])
+    d = json.loads(proc.stdout.strip().splitlines()[-1])
+    total = d["total_blocks"]
+    bound = d["count_bound"]
+    out = [{
+        "variant": "replicated",
+        "blocks_per_dev": total,
+        "gflops_per_dev": round(sum(d["device_gflops"]), 3),
+        "wall_ms": d["ms_replicated"],
+    }, {
+        "variant": "distributed",
+        "blocks_per_dev": max(d["device_blocks"]),
+        "gflops_per_dev": max(d["device_gflops"]),
+        "wall_ms": d["ms_distributed"],
+    }, {
+        "variant": (f"bound_ceil(total/{ndev})" if d["uniform_bs"]
+                    else "bound_sum_group_ceils"),
+        "blocks_per_dev": bound,
+        "gflops_per_dev": "",
+        "wall_ms": "",
+    }]
+    assert max(d["device_blocks"]) <= bound, d
+    assert d["bitwise_equal"]
+    return out
+
+
+def main():
+    print_csv("dist_inverse", rows())
+
+
+if __name__ == "__main__":
+    main()

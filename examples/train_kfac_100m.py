@@ -34,38 +34,66 @@ def config_100m() -> ModelConfig:
     )
 
 
+def config_smoke() -> ModelConfig:
+    """~2M params: the CI-sized stand-in for quick sync/async A-Bs."""
+    return ModelConfig(
+        name="llama-100m-smoke", family="dense",
+        n_layers=2, d_model=128, n_heads=4, n_kv_heads=2, head_dim=32,
+        d_ff=384, vocab=4096, rope_theta=500000.0,
+        soi_block=64, attn_chunk=128,
+    )
+
+
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--steps", type=int, default=200)
-    ap.add_argument("--batch", type=int, default=8)
-    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny model + short run (CI-sized)")
+    ap.add_argument("--steps", type=int, default=None,
+                    help="default: 200 (24 with --smoke)")
+    ap.add_argument("--batch", type=int, default=None)
+    ap.add_argument("--seq", type=int, default=None)
+    ap.add_argument("--dist-inv", action="store_true",
+                    help="block-parallel SOI inversion (repro.solve)")
+    ap.add_argument("--async-inv", action="store_true",
+                    help="double-buffered staleness-tolerant refresh")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_100m_ckpt")
     ap.add_argument("--fresh", action="store_true",
                     help="clear the checkpoint dir first")
     ap.add_argument("--inject-failure-at", type=int, default=None,
-                    help="default: steps//2 (set -1 to disable)")
+                    help="default: steps//2, -1 under --smoke "
+                         "(set -1 to disable)")
     args = ap.parse_args()
+
+    defaults = (24, 4, 32) if args.smoke else (200, 8, 128)
+    cfg = config_smoke() if args.smoke else config_100m()
+    for name, default in zip(("steps", "batch", "seq"), defaults):
+        if getattr(args, name) is None:
+            setattr(args, name, default)
 
     if args.fresh and os.path.isdir(args.ckpt_dir):
         shutil.rmtree(args.ckpt_dir)
 
-    cfg = config_100m()
     n_params = cfg.param_count()
-    print(f"model: {cfg.name}  params={n_params / 1e6:.1f}M")
+    print(f"model: {cfg.name}  params={n_params / 1e6:.1f}M  "
+          f"dist_inv={args.dist_inv}  async_inv={args.async_inv}")
 
     # register the custom config so launch/train.py can find it
-    inject_at = (args.steps // 2 if args.inject_failure_at is None
-                 else args.inject_failure_at)
+    if args.inject_failure_at is None:
+        inject_at = -1 if args.smoke else args.steps // 2
+    else:
+        inject_at = args.inject_failure_at
 
     from repro.core.kfac import KFACConfig
     from repro.data import SyntheticTokens
     from repro.launch.train import KFACProgram
     from repro.runtime import DeviceLoss, LoopConfig, TrainLoop
 
-    kcfg = KFACConfig(lr=2e-2, damping=0.05, block_size=256,
+    kcfg = KFACConfig(lr=2e-2, damping=0.05,
+                      block_size=min(256, cfg.soi_block),
                       stats_every=10, inv_every=10,
                       stats_batch=args.batch, stats_seq=args.seq)
-    program = KFACProgram(cfg, kcfg, seed=0)
+    program = KFACProgram(cfg, kcfg, seed=0, dist_inv=args.dist_inv,
+                          async_inv=args.async_inv)
     ds = SyntheticTokens(vocab=cfg.vocab, seq_len=args.seq,
                          global_batch=args.batch, seed=0)
 

@@ -18,6 +18,7 @@ from repro.core import kfac, soi
 from repro.core.kfac import KFACConfig, KFACState
 from repro.core.soi import LinearSpec
 from repro.dist.api import path_key
+from repro.solve import invert_factor_tree
 
 
 def gn_specs(specs: Mapping[str, LinearSpec]) -> dict:
@@ -27,6 +28,18 @@ def gn_specs(specs: Mapping[str, LinearSpec]) -> dict:
                          share_a_with=None)
         for name, s in specs.items()
     }
+
+
+def refresh_inverses(state: KFACState, cfg: KFACConfig, *,
+                     mesh=None, plan=None) -> KFACState:
+    """G-only inverse refresh through the block-parallel solve layer.
+
+    The solver operates on whatever factor tree it is given, so the
+    Gauss-Newton ablation (G factors only) distributes over INV groups
+    exactly like full K-FAC; without ``mesh``/``plan`` this matches
+    ``kfac.refresh_inverses`` bitwise on the composed method."""
+    return state._replace(inverses=invert_factor_tree(
+        state.factors, cfg, mesh=mesh, plan=plan))
 
 
 def precondition(grads, state: KFACState, specs: Mapping[str, LinearSpec],

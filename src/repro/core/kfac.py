@@ -153,30 +153,44 @@ def update_factors(state: KFACState, a_grams: dict, g_grams: dict,
 # Inverse refresh: the paper's high-precision INV on every diagonal block
 # ---------------------------------------------------------------------------
 
+def invert_blocks_flat(flat: jax.Array, lam: jax.Array,
+                       cfg: KFACConfig) -> jax.Array:
+    """Invert a flat batch of damped blocks: (N, bs, bs) with per-block
+    damping (N,), via the configured method. This is the single
+    per-block inversion primitive shared by the replicated path below
+    and the block-parallel solver (``repro.solve.block_solver``) — one
+    code path, so distributed and replicated refreshes agree bitwise."""
+    lam = lam.reshape((-1, 1, 1))
+    if cfg.inv_method == "exact":
+        eye = jnp.eye(flat.shape[-1], dtype=flat.dtype)
+        return jnp.linalg.inv(flat + lam * eye)
+    taylor = 1 if cfg.inv_method == "composed_fast" else cfg.taylor_terms
+    return jax.vmap(
+        lambda a, l: composed_inverse(
+            a, l[0, 0], ns_iters=cfg.ns_iters,
+            taylor_terms=taylor,
+            refine_steps=cfg.refine_steps))(flat, lam)
+
+
 def _invert_blocks(f: jax.Array, cfg: KFACConfig) -> jax.Array:
     """Invert (..., bs, bs) damped blocks with the composed-precision
     scheme (all O(n^3) work in bf16 partial products — see
     ``core/precision_inv.composed_inverse``)."""
-    lam = soi.tikhonov_damping(f, cfg.damping)[..., None, None]
+    lam = soi.tikhonov_damping(f, cfg.damping)
     shape = f.shape
     flat = f.reshape((-1,) + shape[-2:])
-    lam_flat = lam.reshape((-1, 1, 1))
-
-    if cfg.inv_method == "exact":
-        eye = jnp.eye(shape[-1], dtype=f.dtype)
-        out = jnp.linalg.inv(flat + lam_flat * eye)
-    else:
-        taylor = 1 if cfg.inv_method == "composed_fast" \
-            else cfg.taylor_terms
-        out = jax.vmap(
-            lambda a, l: composed_inverse(
-                a, l[0, 0], ns_iters=cfg.ns_iters,
-                taylor_terms=taylor,
-                refine_steps=cfg.refine_steps))(flat, lam_flat)
-    return out.reshape(shape)
+    return invert_blocks_flat(flat, lam.reshape(-1), cfg).reshape(shape)
 
 
 def refresh_inverses(state: KFACState, cfg: KFACConfig) -> KFACState:
+    """Replicated inverse refresh: every device inverts every block.
+
+    This is the baseline SU/INV graph. Production meshes should prefer
+    the block-parallel solver (``repro.solve.invert_factor_tree`` via
+    ``launch/steps.make_inv_refresh``), where each device inverts only
+    its plan-owned ~1/ndev share — the paper's INV-crossbar-group
+    distribution — and optionally the async double-buffered refresh
+    (``repro.solve.AsyncInverseRefresher``)."""
     new_inv = {}
     for name, f in state.factors.items():
         d = {}

@@ -22,6 +22,7 @@ Gradients are preconditioned block-diagonally:
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Mapping, Tuple
 
 import jax
@@ -52,6 +53,13 @@ class LinearSpec:
 
 def n_blocks(d: int, bs: int) -> int:
     return -(-d // bs)
+
+
+def leaf_block_count(shape: Tuple[int, ...]) -> int:
+    """Total diagonal blocks in one factor leaf ``(*stack, nb, bs, bs)``
+    — the unit the block-parallel solver (repro.solve) distributes over
+    mesh devices (the paper's "SOI blocks onto INV crossbar groups")."""
+    return math.prod(int(d) for d in shape[:-2])
 
 
 def block_size_for(d: int, cap: int, align: int = 16) -> int:

@@ -87,6 +87,22 @@ def shard_hint(x: Any, *axes) -> Any:
     return jax.lax.with_sharding_constraint(x, spec)
 
 
+def mesh_axes(mesh) -> Tuple[str, ...]:
+    """Every axis name of ``mesh``, outer-to-inner — the combined-axis
+    tuple the block-parallel solver shards its device-major block pool
+    over (and all-gathers the inverse shards back across)."""
+    return tuple(mesh.axis_names)
+
+
+def mesh_ndev(mesh) -> int:
+    """Total device count of ``mesh`` (``Mesh.size``; the prod fallback
+    covers abstract-mesh stand-ins that only expose ``.shape``)."""
+    size = getattr(mesh, "size", None)
+    if size is not None:
+        return int(size)
+    return math.prod(dict(mesh.shape).values())
+
+
 def path_key(path) -> str:
     """Canonical string for a jax pytree key path: ``a/b/0/c``."""
     parts = []

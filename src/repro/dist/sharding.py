@@ -34,7 +34,14 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.dist.api import BATCH_AXES, DATA, MODEL, clean_spec, path_key
+from repro.dist.api import (
+    BATCH_AXES,
+    DATA,
+    MODEL,
+    clean_spec,
+    mesh_axes,
+    path_key,
+)
 
 # trailing path component -> parallelism class
 _COL = {
@@ -169,6 +176,14 @@ def cache_sharding(cache: Any, mesh) -> Any:
         return _sharding(mesh, tuple(spec), shape)
 
     return jax.tree_util.tree_map_with_path(one, cache)
+
+
+def solve_pool_sharding(mesh) -> NamedSharding:
+    """Sharding for the block-parallel solver's device-major pools
+    ``(ndev, m, bs, bs)`` (repro.solve.block_solver): the leading dim is
+    exactly one row per device, sharded over *every* mesh axis combined,
+    so shard_map hands each device only its own ``m`` blocks."""
+    return NamedSharding(mesh, P(mesh_axes(mesh)))
 
 
 def pool_sharding(pool: Any, mesh) -> Any:

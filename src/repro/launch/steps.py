@@ -29,8 +29,14 @@ from repro.configs.base import ModelConfig, ShapeCfg
 from repro.core import kfac
 from repro.core.kfac import KFACConfig, KFACState
 from repro.dist import sharding as shard_rules
-from repro.dist.api import BATCH_AXES, shard_hint, shard_like_params
+from repro.dist.api import (
+    BATCH_AXES,
+    mesh_ndev,
+    shard_hint,
+    shard_like_params,
+)
 from repro.models import lm, whisper
+from repro.solve import invert_factor_tree, make_plan
 
 
 class TrainState(NamedTuple):
@@ -230,11 +236,45 @@ def make_stats_step(cfg: ModelConfig, kcfg: KFACConfig) -> Callable:
     return stats_step
 
 
-def make_inv_step(cfg: ModelConfig, kcfg: KFACConfig) -> Callable:
+def make_inv_refresh(cfg: ModelConfig, kcfg: KFACConfig, *,
+                     mesh=None, distributed: bool = False,
+                     abstract_state: Optional[TrainState] = None
+                     ) -> Callable:
+    """Inverse-refresh fn ``factors -> inverses`` for this (arch, kcfg).
+
+    ``distributed=True`` on a multi-device mesh routes through the
+    block-parallel solver (``repro.solve``): a FLOP-cost plan is built
+    once from the abstract factor shapes, and each device inverts only
+    its owned ~1/ndev of the blocks under shard_map. Otherwise the
+    replicated path runs (bitwise-identical per block on the default
+    composed method).
+
+    Operating on the factor subtree (not the whole TrainState) is what
+    lets the async refresher dispatch it as an independent computation
+    overlapping the train steps. Pass ``abstract_state`` when the
+    caller already holds one (whole-model ``eval_shape`` is not free).
+    """
+    plan = None
+    if distributed and mesh is not None and mesh_ndev(mesh) > 1:
+        ab = abstract_state or abstract_train_state(cfg, kcfg)
+        plan = make_plan(ab.kfac.factors, mesh_ndev(mesh), kcfg)
+
+    def refresh(factors):
+        return invert_factor_tree(factors, kcfg, mesh=mesh, plan=plan)
+
+    return refresh
+
+
+def make_inv_step(cfg: ModelConfig, kcfg: KFACConfig, *,
+                  mesh=None, distributed: bool = False) -> Callable:
     """The paper's technique: composed-precision INV of every SOI block."""
+    refresh = make_inv_refresh(cfg, kcfg, mesh=mesh,
+                               distributed=distributed)
 
     def inv_step(state: TrainState) -> TrainState:
-        return state._replace(kfac=kfac.refresh_inverses(state.kfac, kcfg))
+        kstate = state.kfac
+        return state._replace(
+            kfac=kstate._replace(inverses=refresh(kstate.factors)))
 
     return inv_step
 

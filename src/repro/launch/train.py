@@ -36,6 +36,7 @@ from repro.dist import sharding as shard_rules
 from repro.launch import steps as steps_mod
 from repro.launch.steps import TrainState
 from repro.runtime import DeviceLoss, LoopConfig, TrainLoop, elastic_mesh
+from repro.solve import AsyncInverseRefresher
 
 
 def _key_of_path(path) -> str:
@@ -57,12 +58,27 @@ def _sharding_lookup(tree) -> dict:
 
 @dataclasses.dataclass
 class KFACProgram:
+    """K-FAC training program.
+
+    ``dist_inv``: route the SOI inverse refresh through the
+    block-parallel solver (repro.solve) — each device inverts only its
+    plan-owned ~1/ndev of the factor blocks (no-op on 1 device).
+    ``async_inv``: staleness-tolerant double-buffered refresh — step N
+    preconditions with the inverses computed at step N - inv_every
+    while the next refresh overlaps the following train steps.
+    """
+
     cfg: Any
     kcfg: KFACConfig
     seed: int = 0
+    dist_inv: bool = False
+    async_inv: bool = False
 
-    def _shardings(self, mesh):
-        ab = steps_mod.abstract_train_state(self.cfg, self.kcfg)
+    def __post_init__(self):
+        self._refresher = None
+
+    def _shardings(self, mesh, ab=None):
+        ab = ab or steps_mod.abstract_train_state(self.cfg, self.kcfg)
         return TrainState(
             shard_rules.param_sharding(ab.params, mesh),
             shard_rules.kfac_sharding(ab.kfac, ab.params, mesh))
@@ -80,7 +96,8 @@ class KFACProgram:
         return jax.jit(make, out_shardings=st_shard)()
 
     def make_step(self, mesh):
-        st_shard = self._shardings(mesh)
+        ab = steps_mod.abstract_train_state(self.cfg, self.kcfg)
+        st_shard = self._shardings(mesh, ab)
         b_spec = None      # let jit shard the host batch by its sharding
         train = jax.jit(steps_mod.make_train_step(self.cfg, self.kcfg),
                         in_shardings=(st_shard, b_spec),
@@ -90,10 +107,37 @@ class KFACProgram:
                         in_shardings=(st_shard, b_spec),
                         out_shardings=(st_shard, None),
                         donate_argnums=(0,))
-        inv = jax.jit(steps_mod.make_inv_step(self.cfg, self.kcfg),
-                      in_shardings=(st_shard,),
-                      out_shardings=st_shard,
-                      donate_argnums=(0,))
+        # Inverse refresh operates on the factor subtree only, so the
+        # async mode can dispatch it as an independent computation.
+        # One jitted program for both modes — donated: the inverse
+        # buffers being retired become the output buffers of the refresh
+        # that replaces them (the sync path writes in place, the async
+        # path double-buffers; backends without donation support fall
+        # back to fresh allocations).
+        refresh_raw = steps_mod.make_inv_refresh(
+            self.cfg, self.kcfg, mesh=mesh, distributed=self.dist_inv,
+            abstract_state=ab)
+        inv_shard = st_shard.kfac.inverses
+        refresh_into = jax.jit(
+            lambda factors, retired: refresh_raw(factors),
+            donate_argnums=(1,), keep_unused=True,
+            out_shardings=inv_shard)
+        if self.async_inv:
+            # seed the double buffer so the very first dispatch already
+            # runs refresh_into: the single refresh program compiles at
+            # step 0 inside the watchdog's warmup window (a second
+            # program compiling at the *second* trigger would blow the
+            # armed step deadline and start a recovery storm)
+            spare = jax.jit(
+                lambda: jax.tree.map(
+                    lambda s: jnp.zeros(s.shape, s.dtype),
+                    ab.kfac.inverses),
+                out_shardings=inv_shard)()
+            self._refresher = AsyncInverseRefresher(
+                refresh_into=refresh_into, spare_buffers=spare)
+        else:
+            self._refresher = None
+        refresher = self._refresher
         kcfg = self.kcfg
 
         def subsample(batch):
@@ -114,12 +158,36 @@ class KFACProgram:
                 state, m = stats(state, subsample(batch))
                 metrics.update(m)
             if i % kcfg.inv_every == 0:
-                state = inv(state)
+                if refresher is not None:
+                    state = state._replace(
+                        kfac=refresher.step(state.kfac))
+                else:
+                    kst = state.kfac
+                    state = state._replace(kfac=kst._replace(
+                        inverses=refresh_into(kst.factors,
+                                              kst.inverses)))
             state, m = train(state, batch)
             metrics.update(m)
             return state, metrics
 
         return step_fn
+
+    # -- async-refresh lifecycle hooks (called by runtime.TrainLoop) ----
+
+    def flush_async(self, state):
+        """Snapshot view: the state with any in-flight refresh folded
+        in, for checkpointing — the live refresher keeps its pending
+        swap, so checkpoint cadence never changes the training
+        trajectory."""
+        if self._refresher is None:
+            return state
+        return state._replace(kfac=self._refresher.peek(state.kfac))
+
+    def reset_async(self):
+        """Drop the in-flight refresh (elastic recovery: the restored
+        factors no longer match what was dispatched)."""
+        if self._refresher is not None:
+            self._refresher.reset()
 
     def state_sharding(self, mesh):
         lookup = _sharding_lookup(self._shardings(mesh))
@@ -177,6 +245,14 @@ def main(argv=None):
     ap.add_argument("--inv-every", type=int, default=10)
     ap.add_argument("--block-size", type=int, default=128)
     ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--dist-inv", action=argparse.BooleanOptionalAction,
+                    default=False,
+                    help="block-parallel SOI inversion: each device "
+                         "inverts only its plan-owned factor blocks")
+    ap.add_argument("--async-inv", action=argparse.BooleanOptionalAction,
+                    default=False,
+                    help="staleness-tolerant double-buffered inverse "
+                         "refresh overlapping the train steps")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=20)
     ap.add_argument("--inject-failure-at", type=int, default=-1,
@@ -194,7 +270,9 @@ def main(argv=None):
         stats_batch=args.batch, stats_seq=args.seq)
 
     if args.optimizer == "kfac":
-        program = KFACProgram(cfg, kcfg, seed=args.seed)
+        program = KFACProgram(cfg, kcfg, seed=args.seed,
+                              dist_inv=args.dist_inv,
+                              async_inv=args.async_inv)
     else:
         program = SGDProgram(cfg, lr=args.lr, seed=args.seed)
 

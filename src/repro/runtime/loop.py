@@ -38,6 +38,10 @@ log = logging.getLogger("repro.runtime")
 
 
 class Program(Protocol):
+    """Optional hooks (duck-typed, used when present): ``flush_async
+    (state) -> state`` barriers in-flight background work into the state
+    before a checkpoint; ``reset_async()`` drops it on recovery."""
+
     def init_state(self, mesh) -> Any: ...
 
     def make_step(self, mesh) -> Callable: ...
@@ -148,6 +152,20 @@ class TrainLoop:
                 if failures > self.cfg.max_failures:
                     raise
                 self.ckpt.wait()
+                if latest_step(self.cfg.ckpt_dir) is None:
+                    # nothing to restore: recovery re-inits from seed
+                    # and replays from step 0 — loud, because repeated
+                    # pre-first-checkpoint failures rework everything
+                    # (each successful step resets the failure budget)
+                    log.warning(
+                        "recovery with no checkpoint: restarting from "
+                        "fresh init, %d steps of progress replayed",
+                        step)
+                # async-refresh programs: drop any in-flight inverse
+                # refresh — the restored factors no longer match it
+                reset = getattr(self.program, "reset_async", None)
+                if reset is not None:
+                    reset()
                 exclude += getattr(e, "lost", 0)
                 mesh, state, cursor, step_fn = self._start(exclude)
                 # fresh timing window: the first post-restore step
@@ -169,8 +187,16 @@ class TrainLoop:
                 log.info("step %d %s", step, m)
             if cursor.step % self.cfg.ckpt_every == 0 \
                     or cursor.step == self.cfg.total_steps:
+                # async-refresh programs: snapshot with the in-flight
+                # inverse refresh folded in (so it isn't lost across a
+                # restore) — but only the snapshot; rebinding the live
+                # state here would make the training trajectory depend
+                # on the checkpoint cadence
+                flush = getattr(self.program, "flush_async", None)
+                save_state = flush(state) if flush is not None \
+                    else state
                 self.ckpt.save_async(
-                    cursor.step, state,
+                    cursor.step, save_state,
                     meta={"cursor": cursor.to_json()})
 
         self.ckpt.wait()

@@ -1,0 +1,28 @@
+"""Distributed SOI block inversion (the paper's INV crossbar groups).
+
+RePAST parallelizes second-order-information inversion by mapping each
+factor's diagonal blocks onto INV crossbar *groups* that run
+concurrently with the VMM pipelines (Sec. IV-B). This package is the
+TPU-mesh image of that mapping:
+
+  partition      FLOP-cost partitioner: every SOI block of every layer
+                 -> one mesh device (round-robin greedy over the
+                 ``soi.block_size_for`` geometry)
+  block_solver   shard_map block-parallel solver: each device inverts
+                 only its locally-owned blocks with the
+                 composed-precision scheme, then all-gathers the
+                 inverse shards (PDIV-style: partition, invert locally,
+                 exchange only results)
+  async_refresh  staleness-tolerant double-buffered refresh: step N
+                 preconditions with the inverses computed at step
+                 N - inv_every while the next refresh is in flight
+                 (INV groups running concurrently with FP/BP/WU)
+"""
+
+from repro.solve.async_refresh import AsyncInverseRefresher  # noqa: F401
+from repro.solve.block_solver import invert_factor_tree  # noqa: F401
+from repro.solve.partition import (  # noqa: F401
+    Plan,
+    inverse_block_flops,
+    make_plan,
+)

@@ -1,0 +1,124 @@
+"""Staleness-tolerant double-buffered inverse refresh.
+
+RePAST runs its INV crossbar groups *concurrently* with the FP/BP/WU
+pipelines: the SOI inverses a training step consumes are the ones the
+INV engine finished last cadence, not ones computed synchronously in
+the step (Sec. IV-B / Fig. 8). The TPU image: at each ``inv_every``
+trigger the refresher (1) swaps in the refresh dispatched at the
+*previous* trigger — so step N preconditions with inverses of the
+factors as of step N - inv_every — and (2) dispatches the next refresh
+from the current factors as an independent computation. JAX's async
+dispatch lets that refresh overlap the following train steps instead of
+serializing with them.
+
+Double buffering: exactly one refresh is ever in flight; the buffers it
+writes are the ones just retired from the optimizer state (the
+``refresh_into(factors, retired_buffers)`` form donates them), so the
+steady state rotates two inverse-tree allocations.
+
+K-FAC's tolerance to this one-cadence staleness is the same property
+the paper leans on when it amortizes SOI updates over 10 batches: the
+factors move slowly relative to the parameters.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Optional
+
+
+class AsyncInverseRefresher:
+    """Drives ``state.inverses`` from lagged, overlapped refreshes.
+
+    ``refresh_fn(factors) -> inverses`` computes a full inverse tree;
+    ``refresh_into(factors, buffers) -> inverses`` is a donated variant
+    that may reuse ``buffers`` (the inverse tree being retired) for its
+    output. At least one must be given; production passes only
+    ``refresh_into`` + ``spare_buffers`` so exactly one jitted program
+    ever exists.
+
+    The host object is deliberately tiny: all heavy work stays inside
+    the injected (jitted) callables, and the only state is the pending
+    (in-flight) inverse tree.
+
+    ``spare_buffers`` (an inverse-tree of scratch arrays) seeds the
+    double buffer: with it, the *first* dispatch already goes through
+    ``refresh_into``, so only one jitted program ever exists and it
+    compiles at the first trigger (step 0, inside the step-watchdog's
+    warmup window) — without it the donated variant would first compile
+    at the second trigger, mid-training, and a multi-second compile
+    inside an armed watchdog deadline reads as a hung step.
+    """
+
+    def __init__(self, refresh_fn: Optional[Callable[[Any], Any]] = None,
+                 refresh_into: Optional[Callable[[Any, Any], Any]] = None,
+                 spare_buffers: Any = None):
+        if refresh_fn is None and refresh_into is None:
+            raise ValueError(
+                "need refresh_fn and/or refresh_into(+spare_buffers)")
+        self.refresh_fn = refresh_fn
+        self.refresh_into = refresh_into
+        self._spare = spare_buffers
+        self._pending: Any = None
+        self.n_dispatched = 0
+        self.n_swapped = 0
+
+    @property
+    def has_pending(self) -> bool:
+        return self._pending is not None
+
+    def step(self, kstate):
+        """One inv-cadence trigger: swap in the previous refresh (if
+        any), dispatch the next one. Returns the updated state; does not
+        block on the dispatched computation."""
+        retired = None
+        if self._pending is not None:
+            retired = kstate.inverses
+            kstate = kstate._replace(inverses=self._pending)
+            self._pending = None
+            self.n_swapped += 1
+        if retired is None:
+            retired, self._spare = self._spare, None
+        if retired is not None and self.refresh_into is not None:
+            self._pending = self.refresh_into(kstate.factors, retired)
+        else:
+            if self.refresh_fn is None:
+                # donated-only configuration must never silently fall
+                # back to a second (uncompiled) program mid-training
+                raise RuntimeError(
+                    "refresh_into has no retired/spare buffers and no "
+                    "refresh_fn fallback was provided")
+            self._pending = self.refresh_fn(kstate.factors)
+        self.n_dispatched += 1
+        return kstate
+
+    def peek(self, kstate):
+        """State with any in-flight refresh folded in, *without*
+        consuming it — for checkpoint snapshots, so checkpoint cadence
+        never perturbs the live training trajectory (the pending swap
+        still happens at its own trigger)."""
+        if self._pending is not None:
+            return kstate._replace(inverses=self._pending)
+        return kstate
+
+    def flush(self, kstate):
+        """Fold any in-flight refresh into the state (end-of-run
+        barrier), leaving nothing pending. The displaced inverse tree
+        re-seeds the spare so a later ``step()`` still runs the donated
+        program (never a cold second program mid-training)."""
+        if self._pending is not None:
+            if self._spare is None:
+                self._spare = kstate.inverses
+            kstate = kstate._replace(inverses=self._pending)
+            self._pending = None
+            self.n_swapped += 1
+        return kstate
+
+    def reset(self) -> None:
+        """Drop the in-flight refresh (elastic recovery: the restored
+        state's factors no longer match what was dispatched). The
+        dropped tree is retained as the spare — its values are garbage
+        but as a donation target it keeps a donated-only refresher
+        functional if it is reused rather than rebuilt."""
+        if self._pending is not None and self._spare is None:
+            self._spare = self._pending
+        self._pending = None

@@ -1,0 +1,155 @@
+"""shard_map block-parallel SOI inversion.
+
+PDIV-style recipe (see /root/related Kosheira1__SINV's ``pdiv_localmap``:
+partition the matrix, invert partitions locally, exchange only the
+results) applied to the K-FAC factor tree: the partitioner's plan pools
+every same-size diagonal block of the network into device-major
+``(ndev, m, bs, bs)`` arrays, each device runs the composed-precision
+inverse (``kfac.invert_blocks_flat`` — the *same* primitive as the
+replicated path, so results agree bitwise) on its own ``m`` blocks, and
+a single all-gather of the (much smaller than the iteration workload)
+inverse shards replicates the result before it is scattered back into
+the ``A_inv``/``G_inv`` layout.
+
+Per-device O(bs^3) inversion work therefore drops to
+``ceil(total_blocks / ndev) / total_blocks`` of the replicated cost —
+the TPU analogue of RePAST mapping factor blocks onto parallel INV
+crossbar groups (Sec. IV-B).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Mapping, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import soi
+from repro.core.kfac import KFACConfig, invert_blocks_flat
+from repro.dist.api import mesh_axes, mesh_ndev
+from repro.dist.sharding import solve_pool_sharding
+from repro.solve.partition import Plan
+
+__all__ = ["invert_factor_tree"]
+
+
+def _leaf_flat(f: jax.Array, cfg: KFACConfig):
+    """(N, bs, bs) blocks + (N,) per-block Tikhonov damping of a leaf."""
+    lam = soi.tikhonov_damping(f, cfg.damping)
+    bs = f.shape[-1]
+    return f.reshape((-1, bs, bs)), lam.reshape((-1,))
+
+
+def _pool_group(factors, cfg: KFACConfig, group):
+    """Concatenate a group's blocks and index them device-major.
+
+    Padding slots point at an appended identity block (damping 1.0) so
+    every device inverts exactly ``m`` well-conditioned blocks; pads are
+    discarded by the scatter."""
+    blocks, lams = [], []
+    for name, side in group.leaves:
+        b, l = _leaf_flat(factors[name][side], cfg)
+        blocks.append(b)
+        lams.append(l)
+    cat = jnp.concatenate(blocks) if len(blocks) > 1 else blocks[0]
+    lam = jnp.concatenate(lams) if len(lams) > 1 else lams[0]
+    eye = jnp.eye(group.bs, dtype=cat.dtype)[None]
+    ext = jnp.concatenate([cat, eye])
+    lam_ext = jnp.concatenate([lam, jnp.ones((1,), lam.dtype)])
+    idx = group.slots.copy()                    # static numpy indices
+    idx[idx < 0] = group.n_blocks               # -> the identity pad
+    ndev, m = idx.shape
+    pooled = ext[idx.reshape(-1)].reshape(ndev, m, group.bs, group.bs)
+    lam_p = lam_ext[idx.reshape(-1)].reshape(ndev, m)
+    return pooled, lam_p
+
+
+def _scatter_group(factors, group, gathered) -> dict:
+    """Undo the pooling: flattened (ndev*m, bs, bs) -> per-leaf inverses."""
+    flat = gathered.reshape((-1,) + gathered.shape[2:])
+    ordered = flat[group.gather_back]           # concat order, pads gone
+    out: dict = {}
+    ofs = 0
+    for (name, side), cnt in zip(group.leaves, group.leaf_counts):
+        shape = factors[name][side].shape
+        out.setdefault(name, {})[side + "_inv"] = \
+            ordered[ofs:ofs + cnt].reshape(shape)
+        ofs += cnt
+    return out
+
+
+def invert_factor_tree(
+    factors: Mapping[str, Mapping[str, Any]],
+    cfg: KFACConfig,
+    *,
+    mesh=None,
+    plan: Optional[Plan] = None,
+) -> dict:
+    """Factor tree ``{name: {A|G: ...}}`` -> ``{name: {A_inv|G_inv: ...}}``.
+
+    Without a plan (or on a 1-device plan) this is the replicated path:
+    per-leaf ``invert_blocks_flat``, bitwise identical to
+    ``kfac.refresh_inverses``. With a plan it pools blocks device-major
+    and — when ``mesh`` is given — runs the inversion under ``shard_map``
+    so each device touches only its own shard, all-gathering the
+    results; with ``plan`` but no mesh the pooled program runs locally
+    (the single-process image of the same graph, used by tests and by
+    CPU smoke runs).
+    """
+    if plan is None:
+        out: dict = {}
+        for name, f in factors.items():
+            d = {}
+            for side, leaf in f.items():
+                flat, lam = _leaf_flat(leaf, cfg)
+                d[side + "_inv"] = invert_blocks_flat(
+                    flat, lam, cfg).reshape(leaf.shape)
+            out[name] = d
+        return out
+
+    pooled = tuple(_pool_group(factors, cfg, g) for g in plan.groups)
+    blocks = tuple(p[0] for p in pooled)
+    lams = tuple(p[1] for p in pooled)
+
+    if mesh is not None and plan.ndev > 1:
+        if plan.ndev != mesh_ndev(mesh):
+            raise ValueError(
+                f"plan was built for {plan.ndev} devices but the mesh "
+                f"has {mesh_ndev(mesh)}; rebuild the plan with "
+                f"make_plan(factors, mesh_ndev(mesh), cfg)")
+        axes = mesh_axes(mesh)
+        # pin the device-major pools to one row per device *before* the
+        # shard_map boundary, so the gather that builds them lands each
+        # device's blocks on that device instead of materializing the
+        # full pool replicated and re-slicing it
+        pool_sh = solve_pool_sharding(mesh)
+        blocks = tuple(jax.lax.with_sharding_constraint(b, pool_sh)
+                       for b in blocks)
+        lams = tuple(jax.lax.with_sharding_constraint(l, pool_sh)
+                     for l in lams)
+
+        def body(blocks, lams):
+            outs = []
+            for b, l in zip(blocks, lams):
+                # local shard: (1, m, bs, bs) of the device-major pool
+                inv = invert_blocks_flat(b[0], l[0], cfg)[None]
+                outs.append(jax.lax.all_gather(
+                    inv, axis_name=axes, tiled=True))
+            return tuple(outs)
+
+        gathered = jax.shard_map(
+            body, mesh=mesh, in_specs=(P(axes), P(axes)),
+            out_specs=P(), check_vma=False)(blocks, lams)
+    else:
+        gathered = tuple(
+            invert_blocks_flat(
+                b.reshape((-1,) + b.shape[2:]), l.reshape(-1), cfg
+            ).reshape(b.shape)
+            for b, l in zip(blocks, lams))
+
+    out = {}
+    for g, got in zip(plan.groups, gathered):
+        for name, d in _scatter_group(factors, g, got).items():
+            out.setdefault(name, {}).update(d)
+    return out

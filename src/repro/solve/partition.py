@@ -1,0 +1,174 @@
+"""FLOP-cost partitioner: SOI factor blocks -> mesh devices.
+
+The paper sizes each factor block to fit one INV crossbar group and
+distributes blocks over groups so inversion latency shrinks with the
+group count (Sec. IV-B). Here the "group" is a mesh device: every
+diagonal block of every layer's A/G factor (the ``soi.block_size_for``
+geometry — shapes ``(*stack, nb, bs, bs)``) is assigned to exactly one
+device, round-robin in descending FLOP order onto the least-loaded
+device, so per-device inverse work drops ~1/ndev.
+
+The plan is computed host-side from *shapes only* (works on
+``ShapeDtypeStruct`` trees) and is purely static: the solver bakes the
+index arrays into the jitted program, so the distributed refresh traces
+to a fixed gather -> local-invert -> all-gather -> scatter graph.
+
+Blocks are pooled *across* leaves by block size: smoke/real configs
+routinely have ``nb == 1`` per factor, so distributing within one
+factor alone would never scale — pooling every same-``bs`` block of the
+whole network into one batched inversion is what makes per-device count
+<= ceil(total/ndev) achievable.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping, Tuple
+
+import numpy as np
+
+from repro.core.kfac import KFACConfig
+from repro.core.soi import leaf_block_count
+
+
+def inverse_block_flops(bs: int, cfg: KFACConfig) -> float:
+    """Cost model for one composed-precision block inverse.
+
+    Each hi/lo matmul is 3 bf16 partial products (2 when one operand is
+    exactly bf16 — kernels/bitslice_mm's §Perf 3.1 argument), 2*bs^3
+    FLOPs each:
+
+      Newton-Schulz   ns_iters  * (exact-lhs mm + full mm) = 5 products
+      Loop A (Neumann) (terms-1) * (exact-lhs mm + full mm) = 5 products
+      Loop x (refine)  steps     * 2 full mms               = 6 products
+
+    The "exact" linalg path is ~(8/3) bs^3 total; all paths are
+    monotone in bs^3, which is all the greedy partitioner needs.
+    """
+    if cfg.inv_method == "exact":
+        return (8.0 / 3.0) * bs ** 3
+    taylor = 1 if cfg.inv_method == "composed_fast" else cfg.taylor_terms
+    products = (5 * cfg.ns_iters + 5 * max(taylor - 1, 0)
+                + 6 * cfg.refine_steps)
+    return 2.0 * products * bs ** 3
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupPlan:
+    """All same-``bs`` blocks of the factor tree, pooled and assigned.
+
+    ``leaves``       (name, side) pairs in concatenation order.
+    ``leaf_counts``  blocks contributed by each leaf.
+    ``slots``        (ndev, m) indices into the concatenated block list;
+                     -1 marks a padding slot (identity block).
+    ``gather_back``  (N,) position of concatenated block ``j`` inside the
+                     flattened (ndev*m,) pooled output.
+    """
+
+    bs: int
+    leaves: Tuple[Tuple[str, str], ...]
+    leaf_counts: Tuple[int, ...]
+    slots: np.ndarray
+    gather_back: np.ndarray
+
+    @property
+    def n_blocks(self) -> int:
+        return int(sum(self.leaf_counts))
+
+    @property
+    def per_device(self) -> int:
+        return int(self.slots.shape[1])
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    """Static block->device assignment for one factor-tree geometry."""
+
+    ndev: int
+    groups: Tuple[GroupPlan, ...]
+    device_blocks: Tuple[int, ...]     # real (non-padding) blocks per dev
+    device_flops: Tuple[float, ...]
+
+    @property
+    def total_blocks(self) -> int:
+        return int(sum(self.device_blocks))
+
+    @property
+    def max_device_blocks(self) -> int:
+        return int(max(self.device_blocks))
+
+    def summary(self) -> dict:
+        return {
+            "ndev": self.ndev,
+            "total_blocks": self.total_blocks,
+            "device_blocks": list(self.device_blocks),
+            "device_gflops": [round(f / 1e9, 3) for f in
+                              self.device_flops],
+            "groups": [{"bs": g.bs, "n_blocks": g.n_blocks,
+                        "per_device": g.per_device}
+                       for g in self.groups],
+        }
+
+
+def make_plan(factors: Mapping[str, Mapping[str, Any]], ndev: int,
+              cfg: KFACConfig) -> Plan:
+    """Assign every factor block to one of ``ndev`` devices.
+
+    ``factors``: ``{name: {"A"|"G": array-or-ShapeDtypeStruct}}`` (the
+    ``KFACState.factors`` layout; G-only Gauss-Newton trees work too).
+
+    Greedy LPT: groups are visited in descending per-block cost and each
+    block goes to the device with the least accumulated FLOPs (ties
+    break on block count, then device index), so equal-cost blocks
+    round-robin and the final per-device load differs from optimal by at
+    most one block's cost.
+    """
+    if ndev < 1:
+        raise ValueError(f"ndev must be >= 1, got {ndev}")
+
+    by_bs: dict = {}
+    for name in sorted(factors):
+        for side in sorted(factors[name]):
+            shape = tuple(factors[name][side].shape)
+            if len(shape) < 3 or shape[-1] != shape[-2]:
+                raise ValueError(
+                    f"factor {name}/{side} is not (*stack, nb, bs, bs): "
+                    f"{shape}")
+            bs = int(shape[-1])
+            by_bs.setdefault(bs, []).append(
+                ((name, side), leaf_block_count(shape)))
+
+    loads = [0.0] * ndev
+    counts = [0] * ndev
+    groups = []
+    for bs in sorted(by_bs, key=lambda b: -inverse_block_flops(b, cfg)):
+        entries = by_bs[bs]
+        cost = inverse_block_flops(bs, cfg)
+        n = sum(c for _, c in entries)
+        owners = np.empty(n, np.int32)
+        for j in range(n):
+            d = min(range(ndev),
+                    key=lambda i: (loads[i], counts[i], i))
+            owners[j] = d
+            loads[d] += cost
+            counts[d] += 1
+        m = int(max(np.bincount(owners, minlength=ndev).max(), 1))
+        slots = np.full((ndev, m), -1, np.int32)
+        gather_back = np.empty(n, np.int32)
+        fill = [0] * ndev
+        for j in range(n):
+            d = int(owners[j])
+            slots[d, fill[d]] = j
+            gather_back[j] = d * m + fill[d]
+            fill[d] += 1
+        groups.append(GroupPlan(
+            bs=bs,
+            leaves=tuple(k for k, _ in entries),
+            leaf_counts=tuple(c for _, c in entries),
+            slots=slots,
+            gather_back=gather_back,
+        ))
+
+    return Plan(ndev=ndev, groups=tuple(groups),
+                device_blocks=tuple(counts),
+                device_flops=tuple(loads))

@@ -10,18 +10,32 @@
    ``floats`` / ``sampled_from`` / ``booleans`` strategies). It runs
    ``max_examples`` seeded random examples per test — no shrinking, no
    database — which keeps the property tests meaningful without adding
-   a dependency the image doesn't bake in.
+   a dependency the image doesn't bake in. CI installs the real
+   package (``pip install -e ".[test]"``), so there the stub is dormant;
+   ``tests/test_hypothesis_stub.py`` keeps both code paths green.
+4. Provide the ``multidevice`` marker + subprocess runner for tests
+   that need a forced multi-device host platform
+   (``XLA_FLAGS=--xla_force_host_platform_device_count=4``). jax fixes
+   its device count at backend init, so those tests only run when the
+   session already has >= 4 devices (the dedicated CI job, or the
+   in-suite subprocess smoke that re-launches pytest with the flag set
+   — the same pattern as launch/dryrun.py and
+   benchmarks/grad_compression.py).
 """
 
 from __future__ import annotations
 
 import os
 import random
+import subprocess
 import sys
 import types
 
+import pytest
+
 _SRC = os.path.abspath(
     os.path.join(os.path.dirname(__file__), "..", "src"))
+_ROOT = os.path.dirname(_SRC)
 
 try:
     import repro  # noqa: F401
@@ -31,7 +45,15 @@ except ImportError:
 import repro.compat  # noqa: E402,F401  (installs jax backfills)
 
 
-def _install_hypothesis_stub():
+def make_hypothesis_stub():
+    """Build (but do not install) the deterministic hypothesis stand-in.
+
+    Returns ``(mod, st)`` mirroring ``hypothesis`` /
+    ``hypothesis.strategies``. Exposed so the stub-vs-real parity smoke
+    can exercise this implementation even when the real package is
+    installed.
+    """
+
     class _Strategy:
         def __init__(self, fn):
             self._fn = fn
@@ -121,6 +143,11 @@ def _install_hypothesis_stub():
     st.booleans = booleans
     st.just = just
     mod.strategies = st
+    return mod, st
+
+
+def _install_hypothesis_stub():
+    mod, st = make_hypothesis_stub()
     sys.modules["hypothesis"] = mod
     sys.modules["hypothesis.strategies"] = st
 
@@ -129,3 +156,48 @@ try:
     import hypothesis  # noqa: F401
 except ImportError:
     _install_hypothesis_stub()
+
+
+# ---------------------------------------------------------------------------
+# multi-device marker + subprocess runner
+# ---------------------------------------------------------------------------
+
+# the marker itself is registered once, in pyproject.toml
+# [tool.pytest.ini_options].markers
+MULTIDEV_COUNT = 4
+
+
+def pytest_collection_modifyitems(config, items):
+    import jax
+
+    if jax.device_count() >= MULTIDEV_COUNT:
+        return
+    skip = pytest.mark.skip(
+        reason=f"needs {MULTIDEV_COUNT} devices (re-run under "
+               f"XLA_FLAGS=--xla_force_host_platform_device_count="
+               f"{MULTIDEV_COUNT})")
+    for item in items:
+        if "multidevice" in item.keywords:
+            item.add_marker(skip)
+
+
+@pytest.fixture
+def multidev_runner():
+    """Run pytest in a child process with a forced N-device host
+    platform (jax pins its device count at init, so in-process tests
+    cannot change it — same subprocess pattern as launch/dryrun.py)."""
+
+    def run(pytest_args, ndev: int = MULTIDEV_COUNT):
+        env = {**os.environ,
+               "XLA_FLAGS":
+                   f"--xla_force_host_platform_device_count={ndev}",
+               "JAX_PLATFORMS": "cpu",
+               "PYTHONPATH": _SRC + os.pathsep
+                   + os.environ.get("PYTHONPATH", "")}
+        return subprocess.run(
+            [sys.executable, "-m", "pytest", "-q", "-p", "no:cacheprovider",
+             *pytest_args],
+            capture_output=True, text=True, timeout=1200, cwd=_ROOT,
+            env=env)
+
+    return run

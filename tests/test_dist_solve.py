@@ -1,0 +1,329 @@
+"""Block-parallel SOI solver (repro.solve): partitioner invariants,
+pooled-path parity with the replicated refresh, Gauss-Newton routing,
+async double-buffered refresh semantics, and sync-vs-async training."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.core import gauss_newton, kfac
+from repro.core.kfac import KFACConfig, KFACState
+from repro.launch import steps as steps_mod
+from repro.solve import (
+    AsyncInverseRefresher,
+    inverse_block_flops,
+    invert_factor_tree,
+    make_plan,
+)
+
+KCFG = KFACConfig(ns_iters=8, taylor_terms=3, refine_steps=1)
+
+
+def _spd(r, shape):
+    """Random SPD blocks of a factor-leaf shape (*stack, nb, bs, bs)."""
+    bs = shape[-1]
+    a = r.standard_normal(shape[:-1] + (2 * bs,)).astype(np.float32)
+    return jnp.asarray(np.einsum("...ij,...kj->...ik", a, a) / (2 * bs))
+
+
+def _factors(seed=0):
+    """Mixed block sizes, stack dims, shared-A (G-only) leaves — the
+    shapes the plan/pool machinery must handle."""
+    r = np.random.default_rng(seed)
+    return {
+        "layers/attn/wq": {"A": _spd(r, (3, 2, 32, 32)),
+                           "G": _spd(r, (3, 1, 48, 48))},
+        "layers/mlp/wg": {"A": _spd(r, (3, 1, 32, 32)),
+                          "G": _spd(r, (3, 4, 16, 16))},
+        "layers/attn/wk": {"G": _spd(r, (3, 1, 48, 48))},   # shared A
+        "embed": {"G": _spd(r, (1, 48, 48))},
+    }
+
+
+def _kstate(factors):
+    return KFACState(step=jnp.zeros((), jnp.int32), factors=factors,
+                     inverses={}, momentum=None, adam_mu=None,
+                     adam_nu=None)
+
+
+def _flat(tree):
+    return {jax.tree_util.keystr(p): np.asarray(v) for p, v in
+            jax.tree_util.tree_flatten_with_path(tree)[0]}
+
+
+def _assert_tree_equal(a, b, bitwise=True):
+    fa, fb = _flat(a), _flat(b)
+    assert fa.keys() == fb.keys()
+    for k in fa:
+        if bitwise:
+            np.testing.assert_array_equal(fa[k], fb[k], err_msg=k)
+        else:
+            np.testing.assert_allclose(fa[k], fb[k], rtol=0,
+                                       atol=1e-5, err_msg=k)
+
+
+# ---------------------------------------------------------------------------
+# partitioner
+# ---------------------------------------------------------------------------
+
+def test_plan_covers_every_block_once():
+    factors = _factors()
+    for ndev in (1, 2, 4, 5):
+        plan = make_plan(factors, ndev, KCFG)
+        for g in plan.groups:
+            real = g.slots[g.slots >= 0]
+            assert sorted(real.tolist()) == list(range(g.n_blocks))
+            # gather_back inverts the slot layout
+            m = g.slots.shape[1]
+            for j, pos in enumerate(g.gather_back.tolist()):
+                assert g.slots[pos // m, pos % m] == j
+        assert plan.total_blocks == sum(
+            g.n_blocks for g in plan.groups)
+
+
+def test_plan_flop_balance():
+    """Greedy LPT: FLOP loads end within one block's cost of each
+    other, whatever the mix of block sizes."""
+    factors = _factors()
+    for ndev in (2, 4):
+        plan = make_plan(factors, ndev, KCFG)
+        worst = max(inverse_block_flops(g.bs, KCFG)
+                    for g in plan.groups)
+        assert max(plan.device_flops) - min(plan.device_flops) \
+            <= worst + 1e-6
+
+
+def test_plan_uniform_cost_count_bound():
+    """With one block size (equal costs) the greedy degenerates to
+    round-robin: per-device count <= ceil(total/ndev) — the bound the
+    dist_inverse benchmark asserts for the acceptance mesh."""
+    r = np.random.default_rng(2)
+    factors = {f"l{i}": {"G": _spd(r, (3, 32, 32))} for i in range(5)}
+    for ndev in (2, 3, 4):
+        plan = make_plan(factors, ndev, KCFG)
+        assert plan.max_device_blocks <= -(-plan.total_blocks // ndev)
+
+
+def test_plan_from_abstract_shapes():
+    """The plan needs shapes only (ShapeDtypeStruct trees work), so it
+    can be built before any state is materialized."""
+    factors = _factors()
+    ab = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), factors)
+    pa = make_plan(ab, 4, KCFG)
+    pb = make_plan(factors, 4, KCFG)
+    assert pa.device_blocks == pb.device_blocks
+    for ga, gb in zip(pa.groups, pb.groups):
+        np.testing.assert_array_equal(ga.slots, gb.slots)
+
+
+def test_plan_rejects_bad_inputs():
+    with pytest.raises(ValueError, match="ndev"):
+        make_plan(_factors(), 0, KCFG)
+    with pytest.raises(ValueError, match="not .*stack"):
+        make_plan({"w": {"A": jnp.zeros((4, 8))}}, 2, KCFG)
+
+
+def test_cost_model_monotone():
+    assert inverse_block_flops(64, KCFG) < inverse_block_flops(128, KCFG)
+    fast = KFACConfig(inv_method="composed_fast",
+                      ns_iters=KCFG.ns_iters,
+                      refine_steps=KCFG.refine_steps)
+    assert inverse_block_flops(64, fast) < inverse_block_flops(64, KCFG)
+
+
+# ---------------------------------------------------------------------------
+# solver parity (1-process; the shard_map path is covered by
+# tests/test_dist_solve_multidev.py on a forced 4-device platform)
+# ---------------------------------------------------------------------------
+
+def test_local_path_matches_refresh_inverses_bitwise():
+    factors = _factors()
+    ref = jax.jit(
+        lambda s: kfac.refresh_inverses(s, KCFG).inverses)(
+            _kstate(factors))
+    got = jax.jit(lambda f: invert_factor_tree(f, KCFG))(factors)
+    _assert_tree_equal(ref, got)
+
+
+def test_pooled_path_matches_replicated_bitwise():
+    """plan-without-mesh runs the pooled gather/invert/scatter program
+    locally: validates the index bookkeeping against the per-leaf path
+    for every ndev (including non-dividing counts -> identity pads)."""
+    factors = _factors()
+    ref = jax.jit(
+        lambda s: kfac.refresh_inverses(s, KCFG).inverses)(
+            _kstate(factors))
+    for ndev in (1, 3, 4):
+        plan = make_plan(factors, ndev, KCFG)
+        got = jax.jit(
+            lambda f: invert_factor_tree(f, KCFG, plan=plan))(factors)
+        _assert_tree_equal(ref, got)
+
+
+def test_pooled_exact_method_allclose():
+    """The 'exact' linalg path is batch-composition sensitive at the
+    1e-7 level (LAPACK), so parity is allclose rather than bitwise."""
+    cfg = KFACConfig(inv_method="exact")
+    factors = _factors()
+    ref = kfac.refresh_inverses(_kstate(factors), cfg).inverses
+    plan = make_plan(factors, 4, cfg)
+    got = jax.jit(
+        lambda f: invert_factor_tree(f, cfg, plan=plan))(factors)
+    _assert_tree_equal(ref, got, bitwise=False)
+
+
+def test_gauss_newton_refresh_routes_through_solver():
+    factors = {k: {s: v for s, v in d.items() if s == "G"}
+               for k, d in _factors().items()}
+    state = _kstate(factors)
+    ref = jax.jit(
+        lambda s: kfac.refresh_inverses(s, KCFG).inverses)(state)
+    plan = make_plan(factors, 3, KCFG)
+    got = jax.jit(lambda s: gauss_newton.refresh_inverses(
+        s, KCFG, plan=plan).inverses)(state)
+    _assert_tree_equal(ref, got)
+    assert all(set(d) == {"G_inv"} for d in got.values())
+
+
+# ---------------------------------------------------------------------------
+# async double-buffered refresh
+# ---------------------------------------------------------------------------
+
+def test_async_refresher_staleness_semantics():
+    """Trigger k swaps in the refresh dispatched at trigger k-1: the
+    state always preconditions with one-cadence-stale inverses."""
+    calls = []
+
+    def refresh(factors):
+        calls.append(factors)
+        return {"from": factors}
+
+    r = AsyncInverseRefresher(refresh)
+    st = _kstate(0)._replace(inverses={"from": None})
+
+    st = r.step(st._replace(factors=10))
+    assert st.inverses == {"from": None}          # nothing pending yet
+    st = r.step(st._replace(factors=20))
+    assert st.inverses == {"from": 10}            # previous trigger's
+    st = r.step(st._replace(factors=30))
+    assert st.inverses == {"from": 20}
+    assert calls == [10, 20, 30]
+    assert r.n_dispatched == 3 and r.n_swapped == 2
+
+
+def test_async_refresher_donated_variant_and_flush_reset():
+    donated = []
+
+    def refresh(f):
+        return ("inv", f)
+
+    def refresh_into(f, retired):
+        donated.append(retired)
+        return ("inv", f)
+
+    r = AsyncInverseRefresher(refresh, refresh_into=refresh_into)
+    st = _kstate(1)._replace(factors=1, inverses="init")
+    st = r.step(st)                    # first dispatch: nothing retired
+    assert donated == [] and r.has_pending
+    st = r.step(st._replace(factors=2))
+    assert donated == ["init"]         # retired buffers fed back in
+    st = r.flush(st)
+    assert st.inverses == ("inv", 2) and not r.has_pending
+    st = r.step(st._replace(factors=3))
+    r.reset()
+    assert not r.has_pending
+    st2 = r.flush(st)                  # flush after reset: no-op
+    assert st2.inverses == st.inverses
+
+
+def test_async_refresher_donated_only_never_goes_cold():
+    """Production configuration (refresh_into + spare, no fallback):
+    the donated program is used from the very first dispatch, flush()
+    re-seeds the spare with the displaced buffers, and a starved
+    donated-only refresher is a hard error rather than a silent
+    cold-program fallback."""
+    calls = []
+
+    def refresh_into(f, buf):
+        calls.append(buf)
+        return ("inv", f)
+
+    r = AsyncInverseRefresher(refresh_into=refresh_into,
+                              spare_buffers="spare0")
+    st = _kstate(1)._replace(factors=1, inverses="init")
+    st = r.step(st)                        # first dispatch: uses spare
+    st = r.flush(st)                       # fold pending, re-seed spare
+    assert st.inverses == ("inv", 1)
+    st = r.step(st._replace(factors=2))    # uses the re-seeded spare
+    assert calls == ["spare0", "init"]
+
+    # reset() retains the dropped pending tree as the next spare, so a
+    # reused (not rebuilt) donated-only refresher keeps functioning
+    st = r.step(st._replace(factors=3))
+    r.reset()
+    assert not r.has_pending
+    r.step(st._replace(factors=4))
+    assert calls[-1] == ("inv", 3)
+
+    with pytest.raises(ValueError, match="refresh_fn"):
+        AsyncInverseRefresher()
+    starved = AsyncInverseRefresher(refresh_into=refresh_into)
+    with pytest.raises(RuntimeError, match="spare"):
+        starved.step(st)
+
+
+def test_async_vs_sync_training_loss_close():
+    """The acceptance A/B: the same tiny model trained with the async
+    double-buffered refresh lands within tolerance of the synchronous
+    path (K-FAC tolerates one-cadence-stale inverses)."""
+    from repro.launch.mesh import make_dev_mesh
+    from repro.launch.train import KFACProgram
+
+    cfg = get_smoke_config("qwen1.5-0.5b")
+    kcfg = KFACConfig(lr=2e-2, block_size=32, stats_every=2,
+                      inv_every=2, stats_batch=2, stats_seq=16,
+                      ns_iters=6, taylor_terms=2, refine_steps=1)
+    r = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(
+        r.integers(0, cfg.vocab, (2, 16)), jnp.int32)}
+
+    def run(async_inv):
+        program = KFACProgram(cfg, kcfg, seed=0, async_inv=async_inv)
+        mesh = make_dev_mesh(1)
+        with jax.set_mesh(mesh):
+            state = program.init_state(mesh)
+            step = program.make_step(mesh)
+            losses = []
+            for _ in range(8):
+                state, m = step(state, batch)
+                losses.append(float(m["loss"]))
+            state = program.flush_async(state)
+        return losses
+
+    sync = run(False)
+    asyn = run(True)
+    assert sync[-1] < sync[0] and asyn[-1] < asyn[0]
+    assert abs(asyn[-1] - sync[-1]) <= 0.25 * abs(sync[0] - sync[-1])
+
+
+def test_make_inv_step_matches_legacy_refresh():
+    """launch.steps.make_inv_step (now routed through repro.solve) is
+    bitwise the old kfac.refresh_inverses on the replicated path."""
+    cfg = get_smoke_config("qwen1.5-0.5b")
+    kcfg = KFACConfig(block_size=32, ns_iters=6, taylor_terms=2,
+                      refine_steps=1)
+    mod = steps_mod.model_module(cfg)
+    params = mod.init(cfg, jax.random.PRNGKey(0))
+    specs = steps_mod.kfac_specs(cfg)
+    state = kfac.init(params, specs, kcfg)
+    r = np.random.default_rng(1)
+    factors = jax.tree.map(lambda x: _spd(r, x.shape), state.factors)
+    state = state._replace(factors=factors)
+    tstate = steps_mod.TrainState(params, state)
+    got = jax.jit(steps_mod.make_inv_step(cfg, kcfg))(tstate)
+    ref = jax.jit(lambda s: kfac.refresh_inverses(s, kcfg))(state)
+    _assert_tree_equal(ref.inverses, got.kfac.inverses)

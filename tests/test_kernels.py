@@ -84,6 +84,27 @@ def test_bitslice_mm_property(m, k, n, seed):
     np.testing.assert_allclose(out, oracle, rtol=1e-5, atol=atol)
 
 
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+@pytest.mark.parametrize("m,k,n", [
+    (96, 192, 64),        # non-square, K-dominant
+    (200, 64, 320),       # non-square, N-dominant, ragged M
+    (33, 129, 257),       # every dim ragged
+])
+def test_bitslice_mm_dtype_parity_vs_oracle(m, k, n, dtype):
+    """Kernel == ref.py oracle on identically-cast operands for both
+    fp32 and bf16 inputs (bf16 inputs are exactly representable, so the
+    lo slice vanishes and parity must be exact-tolerance)."""
+    r = _rng(m + k + n)
+    dt = jnp.dtype(dtype)
+    a = jnp.asarray(r.standard_normal((m, k)), dt)
+    b = jnp.asarray(r.standard_normal((k, n)), dt)
+    out = bitslice_mm(a, b, bm=128, bn=128, bk=128)
+    oracle = ref.bitslice_mm_ref(a, b)
+    assert out.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(out), np.asarray(oracle),
+                               rtol=0, atol=1e-4)
+
+
 # ---------------------------------------------------------------------------
 # neumann_inv
 # ---------------------------------------------------------------------------
@@ -157,6 +178,26 @@ def test_neumann_inv_scalar_damping_broadcasts():
     np.testing.assert_allclose(got, exact, rtol=0, atol=1e-3)
 
 
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+@pytest.mark.parametrize("nb,n", [(2, 64), (3, 96), (4, 48)])
+def test_neumann_inv_scalar_damping_parity_sweep(nb, n, dtype):
+    """The PR-2 scalar-damping broadcast across a shape/dtype sweep
+    (the original regression pinned a single (3, 64) fp32 case):
+    scalar == per-block vector == the ref.py oracle, for nb > 1 and
+    bf16 inputs."""
+    r = _rng(nb * 100 + n + len(dtype))
+    a = jnp.asarray(_spd(r, nb, n), jnp.dtype(dtype))
+    kw = dict(ns_iters=14, taylor_terms=3, refine_steps=1)
+    got = np.asarray(neumann_inv(a, 0.08, **kw))
+    vec = np.asarray(neumann_inv(
+        a, np.full((nb,), 0.08, np.float32), **kw))
+    np.testing.assert_allclose(got, vec, rtol=0, atol=1e-6)
+    oracle = np.asarray(ref.neumann_inv_ref(
+        a.astype(jnp.float32), jnp.full((nb,), 0.08, jnp.float32),
+        **kw))
+    np.testing.assert_allclose(got, oracle, rtol=0, atol=1e-5)
+
+
 def test_neumann_inv_rejects_wrong_damping_shape():
     r = _rng(22)
     a = _spd(r, 2, 64)
@@ -183,6 +224,28 @@ def test_fused_gram_inv_matches_oracle(t, nb, n, bt):
     oracle = ref.fused_gram_inv_ref(a, rel_damp=0.05, ns_iters=20,
                                     taylor_terms=4, refine_steps=2)
     np.testing.assert_allclose(out, oracle, rtol=0, atol=2e-4)
+
+
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+@pytest.mark.parametrize("t,nb,n,bt", [
+    (384, 2, 48, 128),     # nb > 1, small non-square tiles
+    (500, 3, 96, 256),     # nb > 1, ragged T
+    (260, 4, 33, 128),     # nb > 1, ragged n (padding path)
+])
+def test_fused_gram_inv_parity_sweep(t, nb, n, bt, dtype):
+    """Kernel == ref.py oracle across nb > 1 block counts, non-square
+    activation panels and fp32/bf16 inputs (both cast to fp32 at entry,
+    so parity holds at float-associativity tolerance)."""
+    r = _rng(t + 10 * nb + n)
+    a = jnp.asarray(r.standard_normal((t, nb, n)), jnp.dtype(dtype))
+    out = fused_gram_inv(a, rel_damp=0.05, bt=bt, ns_iters=14,
+                         taylor_terms=3, refine_steps=1)
+    oracle = ref.fused_gram_inv_ref(
+        a.astype(jnp.float32), rel_damp=0.05, ns_iters=14,
+        taylor_terms=3, refine_steps=1)
+    assert out.shape == (nb, n, n)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(oracle),
+                               rtol=0, atol=5e-4)
 
 
 def test_fused_gram_inv_matches_exact():
