@@ -12,6 +12,8 @@ import io
 import time
 from typing import Callable, Dict, List
 
+import jax
+
 
 def print_csv(name: str, rows: List[Dict]) -> str:
     if not rows:
@@ -34,11 +36,18 @@ def print_csv(name: str, rows: List[Dict]) -> str:
 
 
 def timed(fn: Callable, *args, n: int = 3, **kw):
-    """(result, best_us_per_call)."""
+    """(result, best_us_per_call), measured to completion.
+
+    jax dispatch is async: returning from ``fn`` only means the work
+    was *enqueued*, so the result is blocked on
+    (``jax.block_until_ready`` walks pytrees and passes non-jax values
+    through) before the clock stops. One untimed warmup call keeps jit
+    compilation off the clock; best-of-``n`` follows.
+    """
+    res = jax.block_until_ready(fn(*args, **kw))
     best = float("inf")
-    res = None
     for _ in range(n):
         t0 = time.perf_counter()
-        res = fn(*args, **kw)
+        res = jax.block_until_ready(fn(*args, **kw))
         best = min(best, (time.perf_counter() - t0) * 1e6)
     return res, best

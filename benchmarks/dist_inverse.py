@@ -30,13 +30,13 @@ _NDEV = int(os.environ.get("REPRO_DI_DEVICES", "4"))
 os.environ["XLA_FLAGS"] = (
     "--xla_force_host_platform_device_count=%d" % _NDEV)
 import json
-import time
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
 import repro.compat
+from benchmarks.common import timed
 from repro.configs import get_smoke_config
 from repro.core.kfac import KFACConfig
 from repro.launch import steps as steps_mod
@@ -79,21 +79,10 @@ dist = jax.jit(lambda f: invert_factor_tree(f, kcfg, mesh=mesh,
                                             plan=plan))
 
 
-def timed(fn, *a):
-    out = fn(*a)
-    jax.block_until_ready(jax.tree.leaves(out)[0])
-    best = float("inf")
-    for _ in range(3):
-        t0 = time.monotonic()
-        out = fn(*a)
-        jax.block_until_ready(jax.tree.leaves(out)[0])
-        best = min(best, time.monotonic() - t0)
-    return out, best * 1e3
-
-
-inv_rep, ms_rep = timed(rep, factors)
+inv_rep, us_rep = timed(rep, factors)
 with jax.set_mesh(mesh):
-    inv_dist, ms_dist = timed(dist, factors)
+    inv_dist, us_dist = timed(dist, factors)
+ms_rep, ms_dist = us_rep / 1e3, us_dist / 1e3
 
 # numerical parity (bitwise on the default composed method)
 ra = jax.tree.leaves(inv_rep)
@@ -131,8 +120,9 @@ def rows():
     proc = subprocess.run(
         [sys.executable, "-c", _CHILD], capture_output=True, text=True,
         timeout=1800,
-        env={**os.environ, "PYTHONPATH": os.path.join(
-            os.path.dirname(__file__), "..", "src")})
+        env={**os.environ, "PYTHONPATH": os.pathsep.join((
+            os.path.join(os.path.dirname(__file__), "..", "src"),
+            os.path.join(os.path.dirname(__file__), "..")))})
     if proc.returncode != 0:
         raise RuntimeError(proc.stderr[-2000:])
     d = json.loads(proc.stdout.strip().splitlines()[-1])

@@ -4,7 +4,9 @@ On CPU we cannot time TPU kernels; what IS measurable here and maps to
 the paper's claims:
 
   * accuracy ladder — bits recovered by each stage (NS-only, +Neumann,
-    +refinement), paper Fig. 4 analogue on the bf16/MXU regime;
+    +refinement), paper Fig. 4 analogue on the bf16/MXU regime, with
+    interpret-mode wall time per stage (``common.timed`` — blocks on
+    the result, so the number is compute, not async dispatch);
   * HBM-traffic model — bytes the VMEM-resident kernel avoids vs the
     streaming XLA implementation (the memory-roofline motivation for
     kernels/neumann_inv.py), per SOI block size.
@@ -14,7 +16,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import print_csv
+from benchmarks.common import print_csv, timed
 
 
 def accuracy_ladder(n: int = 128, seed: int = 0):
@@ -35,11 +37,13 @@ def accuracy_ladder(n: int = 128, seed: int = 0):
         ("ns+neumann+refine", dict(ns_iters=20, taylor_terms=4,
                                    refine_steps=2)),
     ):
-        inv = np.asarray(neumann_inv(a, damp, **kw))
+        got, us = timed(neumann_inv, a, damp, n=1, **kw)
+        inv = np.asarray(got)
         rel = np.max(np.abs(inv - exact)) / np.max(np.abs(exact))
         out.append({"stage": tag,
                     "rel_err": float(rel),
-                    "bits": round(float(-np.log2(max(rel, 1e-30))), 1)})
+                    "bits": round(float(-np.log2(max(rel, 1e-30))), 1),
+                    "wall_ms": round(us / 1e3, 2)})
     return out
 
 

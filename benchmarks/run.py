@@ -34,6 +34,7 @@ def main(argv=None):
         soi_precision,
         soi_sizes,
         speedup,
+        wu_fusion,
     )
 
     scorecard = []
@@ -69,6 +70,8 @@ def main(argv=None):
     run("fig13_mapping", mapping_impact.main)
     score(mapping_impact.headline())
     run("kernel_bench", kernel_bench.main)
+    # fused vs per-leaf WU graph; writes BENCH_wu_fusion.json
+    run("wu_fusion", lambda: wu_fusion.main([]))
     if not args.fast:
         from benchmarks import grad_compression
         run("grad_compression_dcn", grad_compression.main)

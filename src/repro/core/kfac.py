@@ -63,21 +63,37 @@ class KFACState(NamedTuple):
     step: jax.Array                 # int32 scalar
     factors: Any                    # name -> {"A": ..., "G": ...}
     inverses: Any                   # name -> {"A_inv": ..., "G_inv": ...}
-    momentum: Any                   # pytree like params
-    adam_mu: Any                    # pytree like params (first-order path)
+    # Optimizer moments are allocated per update path: factored leaves
+    # use heavy-ball momentum only, first-order leaves Adam's mu/nu
+    # only. The unused side holds a zero-size placeholder so every
+    # tree keeps the params treedef (checkpoint/sharding layouts are
+    # structure-stable) without paying full-model memory three times.
+    momentum: Any                   # like params on factored leaves
+    adam_mu: Any                    # like params on first-order leaves
     adam_nu: Any
+
+
+def _moment_placeholder() -> jax.Array:
+    return jnp.zeros((0,), jnp.float32)
 
 
 def init(params: Any, specs: Mapping[str, LinearSpec],
          cfg: KFACConfig) -> KFACState:
-    zeros = jax.tree.map(jnp.zeros_like, params)
+    def mom(path, p):
+        return (jnp.zeros_like(p) if path_key(path) in specs
+                else _moment_placeholder())
+
+    def adam(path, p):
+        return (_moment_placeholder() if path_key(path) in specs
+                else jnp.zeros_like(p))
+
     return KFACState(
         step=jnp.zeros((), jnp.int32),
         factors=soi.init_factors(specs, cfg.block_size),
         inverses=soi.init_inverses(specs, cfg.block_size),
-        momentum=zeros,
-        adam_mu=zeros,
-        adam_nu=jax.tree.map(jnp.zeros_like, params),
+        momentum=jax.tree_util.tree_map_with_path(mom, params),
+        adam_mu=jax.tree_util.tree_map_with_path(adam, params),
+        adam_nu=jax.tree_util.tree_map_with_path(adam, params),
     )
 
 
@@ -206,14 +222,148 @@ def refresh_inverses(state: KFACState, cfg: KFACConfig) -> KFACState:
 # WU graph: preconditioning + parameter update
 # ---------------------------------------------------------------------------
 
+def inverse_pools(inverses: Any, inv_plan) -> dict:
+    """Concatenate the inverse tree into per-``bs`` flat pools
+    ``{bs: (M, bs, bs)}`` in the plan's pooled block order — the layout
+    the WU plan's ``a_src``/``g_src`` index and the block-parallel
+    solver distributes device-major. Feeds the tile-indexed kernel
+    path of :func:`precondition_pooled`."""
+    pools = {}
+    for g in inv_plan.groups:
+        parts = [inverses[name][side + "_inv"].reshape((-1, g.bs, g.bs))
+                 for name, side in g.leaves]
+        pools[g.bs] = parts[0] if len(parts) == 1 else \
+            jnp.concatenate(parts)
+    return pools
+
+
+def precondition_pooled(grads_by_name: Mapping[str, jax.Array],
+                        inverses: Any, wu_plan,
+                        use_kernel: bool = False) -> dict:
+    """Pooled fused WU graph: one batched two-sided block VMM per
+    stacked geometry group instead of one einsum per leaf — the TPU
+    image of the paper's fused VMM⊕INV crossbar groups (Sec. V).
+
+    The local pooling is *concat-stacked* (same-(nb_i, bi, nb_o, bo)
+    leaves ride one einsum batched over the concatenated stack axis):
+    pure concatenations and slices, no index gathers — on CPU XLA a
+    per-tile gather lowers to serial ``call`` ops that cost more than
+    the per-leaf loop saved (measured in benchmarks/wu_fusion.py).
+    The tile-indexed device-major pools (``wu_plan.groups``) are the
+    distributed layout, consumed by ``solve.fused_wu`` under shard_map
+    and by the ``kernels.fused_precond`` Pallas kernel on TPU.
+
+    Per-tile math is :func:`soi.two_sided_block_vmm` with the same
+    left-first association as the per-leaf path, so outputs are bitwise
+    identical to :func:`precondition` (tests pin this). Groups marked
+    unpooled (single member, or gradient bytes above the plan's
+    pooling cap — concat copies beat dispatch savings there) fall back
+    to the per-leaf einsum inside the same program.
+
+    ``use_kernel`` routes the tile-indexed pools (``wu_plan.groups``)
+    through the ``kernels.fused_precond`` Pallas program instead — the
+    TPU path, where both VMMs run back-to-back in VMEM with the
+    trust-region dot accumulated in the same pass. Its hi/lo bit-
+    sliced products are allclose (not bitwise) to the einsum path, so
+    it is opt-in and excluded from the parity contract.
+    """
+    if use_kernel:
+        return _precondition_pooled_kernel(grads_by_name, inverses,
+                                           wu_plan)
+    out = {}
+    for grp in wu_plan.stacked:
+        bi, bo = grp.bi, grp.bo
+        if not grp.pooled:
+            for m in grp.members:
+                out[m.name] = soi.block_precondition(
+                    grads_by_name[m.name],
+                    inverses[m.a_owner]["A_inv"],
+                    inverses[m.name]["G_inv"],
+                    axes=factor_axes(m.name))
+            continue
+        def rs(x, shape):            # reshape only when it moves
+            return x if x.shape == shape else x.reshape(shape)
+
+        gs, a_s, g_s = [], [], []
+        for m in grp.members:
+            gp = soi.pad_to_blocks(soi.pad_to_blocks(
+                grads_by_name[m.name], -2, bi), -1, bo)
+            gs.append(rs(gp, (m.n_stack, grp.nb_i, bi, grp.nb_o, bo)))
+            a_s.append(rs(inverses[m.a_owner]["A_inv"],
+                          (m.n_stack, grp.nb_i, bi, bi)))
+            g_s.append(rs(inverses[m.name]["G_inv"],
+                          (m.n_stack, grp.nb_o, bo, bo)))
+        o = soi.two_sided_block_vmm(
+            jnp.concatenate(a_s), jnp.concatenate(gs),
+            jnp.concatenate(g_s))
+        ofs = 0
+        for m in grp.members:
+            blk = rs(o[ofs:ofs + m.n_stack],
+                     m.stack + (grp.nb_i * bi, grp.nb_o * bo))
+            if blk.shape[-2:] != (m.d_in, m.d_out):
+                blk = blk[..., :m.d_in, :m.d_out]
+            out[m.name] = blk
+            ofs += m.n_stack
+    return out
+
+
+def _precondition_pooled_kernel(grads_by_name, inverses, wu_plan):
+    """Tile-indexed pools -> ``kernels.fused_precond``: one Pallas
+    program per (bi, bo) pool, every tile's A/G inverse gathered from
+    the per-``bs`` pools the INV solver lays out. The kernel also
+    emits per-tile TR dots in the same pass; this wrapper discards
+    them (the parity-bound dot in :func:`apply_updates` folds per-leaf
+    terms in the legacy order)."""
+    from repro.kernels import ops as kernel_ops
+
+    pools = inverse_pools(inverses, wu_plan.inv_plan)
+    out = {}
+    for grp in wu_plan.groups:
+        tiles = [soi.gather_grad_tiles(grads_by_name[l.name], l.stack,
+                                       grp.bi, grp.bo)
+                 for l in grp.leaves]
+        g_pool = tiles[0] if len(tiles) == 1 else jnp.concatenate(tiles)
+        a_sel = pools[grp.bi][jnp.asarray(grp.a_src)]
+        g_sel = pools[grp.bo][jnp.asarray(grp.g_src)]
+        o, _dots = kernel_ops.fused_precond(a_sel, g_pool, g_sel)
+        ofs = 0
+        for l in grp.leaves:
+            n = l.n_tiles
+            out[l.name] = soi.scatter_grad_tiles(
+                o[ofs:ofs + n], l.stack, l.nb_i, l.nb_o, l.d_in,
+                l.d_out)
+            ofs += n
+    return out
+
+
 def precondition(grads: Any, state: KFACState,
-                 specs: Mapping[str, LinearSpec], cfg: KFACConfig) -> Any:
+                 specs: Mapping[str, LinearSpec], cfg: KFACConfig,
+                 wu_plan=None, use_kernel: bool = False) -> Any:
     """Apply ``A^{-1} g G^{-1}`` to every factored weight's gradient
     (paper Eqn. 3 / the WU dataflow graph). Non-factored params pass
     through unchanged (they take the first-order path in
-    :func:`apply_updates`)."""
-    flat = jax.tree_util.tree_flatten_with_path(grads)
-    leaves, treedef = flat
+    :func:`apply_updates`).
+
+    ``wu_plan`` (a ``repro.solve.WUPlan``) switches to the pooled fused
+    program; without it the legacy per-leaf loop runs (kept for parity
+    tests and as the no-plan fallback)."""
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(grads)
+    if wu_plan is not None:
+        grads_by_name = {path_key(p): g for p, g in leaves
+                         if path_key(p) in specs}
+        pooled = precondition_pooled(grads_by_name, state.inverses,
+                                     wu_plan, use_kernel=use_kernel)
+        missing = set(grads_by_name) - set(pooled)
+        if missing:
+            # a stale plan (built for a different spec set) would
+            # otherwise pass raw gradients through for the uncovered
+            # factored leaves — silent training degradation
+            raise ValueError(
+                f"wu_plan does not cover factored leaves "
+                f"{sorted(missing)}; rebuild it with make_wu_plan for "
+                f"the current specs/factors")
+        out = [pooled.get(path_key(p), g) for p, g in leaves]
+        return jax.tree_util.tree_unflatten(treedef, out)
     out = []
     for path, g in leaves:
         name = path_key(path)
@@ -229,15 +379,118 @@ def precondition(grads: Any, state: KFACState,
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
+def _pooled_chain(idx, leaves_by_slot, fn, n_out):
+    """Run one elementwise update chain over many leaves at once.
+
+    ``idx``: leaf positions participating; ``leaves_by_slot``: tuples of
+    per-position input leaves (p, d, m, ...); ``fn(vec...) -> vecs``
+    operates on flat fp32 vectors. Leaves are raveled and concatenated
+    per dtype group, the chain runs once per group, and the results are
+    split back — elementwise ops are position-independent, so every
+    output leaf is bitwise what the per-leaf loop computes, in ~2
+    fused chains instead of one per leaf. The concat/split costs ~4
+    extra full passes over the moment memory, which on CPU XLA is
+    slower than the per-leaf chains it replaces (benchmarks/wu_fusion
+    measured 2-3x) — hence opt-in ``pool_elementwise``, for backends
+    where kernel-launch count dominates (TPU).
+    Returns ``n_out`` dicts mapping leaf position -> updated leaf.
+    """
+    outs = [dict() for _ in range(n_out)]
+    by_dtype: dict = {}
+    for k in idx:
+        by_dtype.setdefault(
+            jnp.asarray(leaves_by_slot[0][k]).dtype, []).append(k)
+    for ks in by_dtype.values():
+        vecs = [jnp.concatenate([jnp.ravel(ins[k]) for k in ks])
+                if len(ks) > 1 else jnp.ravel(ins[ks[0]])
+                for ins in leaves_by_slot]
+        res = fn(*vecs)
+        ofs = 0
+        for k in ks:
+            ref = leaves_by_slot[0][k]
+            sz = ref.size
+            for slot in range(n_out):
+                outs[slot][k] = res[slot][ofs:ofs + sz].reshape(
+                    ref.shape)
+            ofs += sz
+    return outs
+
+
+def _apply_updates_pooled(leaves_p, treedef, leaves_pre, leaves_g,
+                          leaves_m, leaves_mu, leaves_nu, names, nu,
+                          stepf, step, state: KFACState,
+                          cfg: KFACConfig) -> Tuple[Any, KFACState]:
+    """Pooled elementwise tail of the fused WU program: one momentum
+    chain over every factored leaf, one Adam chain over every
+    first-order leaf (moment placeholders pass through untouched)."""
+    n = len(leaves_p)
+    fact = [k for k in range(n) if path_key(leaves_p[k][0]) in names]
+    sfact = set(fact)
+    adam = [k for k in range(n) if k not in sfact]
+    ps = [p for _, p in leaves_p]
+
+    new_p = list(ps)
+    new_m = list(leaves_m)
+    new_mu = list(leaves_mu)
+    new_nu = list(leaves_nu)
+
+    if fact:
+        def mom_chain(p, d, m):
+            m2 = cfg.momentum * m + d * nu
+            upd = cfg.lr * m2 + cfg.lr * cfg.weight_decay * p
+            return p - upd, m2
+
+        got_p, got_m = _pooled_chain(
+            fact, (ps, leaves_pre, leaves_m), mom_chain, 2)
+        for k in fact:
+            new_p[k] = got_p[k]
+            new_m[k] = got_m[k]
+
+    if adam:
+        def adam_chain(p, g, mu, nvu):
+            mu2 = cfg.adam_b1 * mu + (1 - cfg.adam_b1) * g
+            nu2 = cfg.adam_b2 * nvu + (1 - cfg.adam_b2) * g * g
+            mhat = mu2 / (1 - cfg.adam_b1 ** stepf)
+            nhat = nu2 / (1 - cfg.adam_b2 ** stepf)
+            p2 = p - cfg.lr * mhat / (jnp.sqrt(nhat) + cfg.adam_eps)
+            return p2, mu2, nu2
+
+        got_p, got_mu, got_nu = _pooled_chain(
+            adam, (ps, leaves_g, leaves_mu, leaves_nu), adam_chain, 3)
+        for k in adam:
+            new_p[k] = got_p[k]
+            new_mu[k] = got_mu[k]
+            new_nu[k] = got_nu[k]
+
+    params2 = jax.tree_util.tree_unflatten(treedef, new_p)
+    state2 = state._replace(
+        step=step,
+        momentum=jax.tree_util.tree_unflatten(treedef, new_m),
+        adam_mu=jax.tree_util.tree_unflatten(treedef, new_mu),
+        adam_nu=jax.tree_util.tree_unflatten(treedef, new_nu),
+    )
+    return params2, state2
+
+
 def apply_updates(params: Any, grads: Any, state: KFACState,
                   specs: Mapping[str, LinearSpec],
-                  cfg: KFACConfig) -> Tuple[Any, KFACState]:
+                  cfg: KFACConfig, wu_plan=None,
+                  pool_elementwise: bool = False
+                  ) -> Tuple[Any, KFACState]:
     """Momentum + trust-region-clipped update.
 
     Factored params: preconditioned direction with heavy-ball momentum.
     Non-factored params (norms, embeddings, gates): Adam.
-    """
-    pre = precondition(grads, state, specs, cfg)
+
+    With ``wu_plan`` (a ``repro.solve.WUPlan``) the preconditioning
+    runs pooled-fused — batched VMM⊕INV programs over the plan's
+    stacked geometry groups — bitwise identical to the per-leaf
+    reference below. ``pool_elementwise`` additionally concatenates
+    the momentum/Adam chains into one fused chain per update path
+    (bitwise-identical too); it trades ~4 extra moment-memory passes
+    for ~n_leaves fewer kernels, a win only where launch overhead
+    dominates (TPU), so it is off by default."""
+    pre = precondition(grads, state, specs, cfg, wu_plan=wu_plan)
     names = {name for name in specs}
 
     # KL/trust-region clip: scale the preconditioned step so that
@@ -246,6 +499,8 @@ def apply_updates(params: Any, grads: Any, state: KFACState,
     # so including those leaves adds plain |g|^2 mass that inflates the
     # clip and spuriously shrinks ``nu`` for the preconditioned step
     # (the Adam update is scale-invariant in g and needs no clip).
+    # Both WU paths fold the per-leaf dots in this exact order, so the
+    # clip scale — and with it the whole update — stays bitwise equal.
     leaves_pre_p, _ = jax.tree_util.tree_flatten_with_path(pre)
     terms = [jnp.sum(d * g) for (path, d), g in zip(
         leaves_pre_p, jax.tree.leaves(grads))
@@ -263,6 +518,11 @@ def apply_updates(params: Any, grads: Any, state: KFACState,
     leaves_m = jax.tree.leaves(state.momentum)
     leaves_mu = jax.tree.leaves(state.adam_mu)
     leaves_nu = jax.tree.leaves(state.adam_nu)
+
+    if wu_plan is not None and pool_elementwise:
+        return _apply_updates_pooled(
+            leaves_p, treedef, leaves_pre, leaves_g, leaves_m,
+            leaves_mu, leaves_nu, names, nu, stepf, step, state, cfg)
 
     new_p, new_m, new_mu, new_nu = [], [], [], []
     for (path, p), d, g, m, mu, nvu in zip(

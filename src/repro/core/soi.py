@@ -155,6 +155,51 @@ def init_inverses(specs: Mapping[str, LinearSpec], bs: int) -> dict:
     return out
 
 
+def two_sided_block_vmm(a_inv: jax.Array, gp: jax.Array,
+                        g_inv: jax.Array) -> jax.Array:
+    """``A_inv[i] @ g[i, j] @ G_inv[j]`` on blocked tiles, contraction
+    order pinned left-first. Both the per-leaf WU path (tiles batched
+    over ``(*stack, nb_i, nb_o)``) and the pooled fused path (tiles
+    batched over one flat pool dim) route through matmuls with exactly
+    this association, which is what makes the two bitwise identical —
+    a 3-operand einsum would leave the association to the contraction
+    planner."""
+    tmp = jnp.einsum("...iab,...ibjc->...iajc", a_inv, gp,
+                     preferred_element_type=jnp.float32)
+    return jnp.einsum("...iajc,...jcd->...iajd", tmp, g_inv,
+                      preferred_element_type=jnp.float32)
+
+
+def gather_grad_tiles(g: jax.Array, stack: Tuple[int, ...], bi: int,
+                      bo: int) -> jax.Array:
+    """Blocked-gradient tiles in pool order.
+
+    ``g``: (*stack, d_in, d_out) -> (prod(stack)*nb_i*nb_o, bi, bo),
+    C-order over (stack..., i, j) — the tile enumeration the WU plan's
+    ``a_src``/``g_src`` index arrays assume. Pad rows/cols are zero, so
+    pooled trust-region dots over padded tiles equal the unpadded ones.
+    """
+    gp = pad_to_blocks(pad_to_blocks(g, -2, bi), -1, bo)
+    nb_i, nb_o = gp.shape[-2] // bi, gp.shape[-1] // bo
+    gp = gp.reshape(stack + (nb_i, bi, nb_o, bo))
+    ls = len(stack)
+    gp = gp.transpose(tuple(range(ls)) + (ls, ls + 2, ls + 1, ls + 3))
+    return gp.reshape((-1, bi, bo))
+
+
+def scatter_grad_tiles(tiles: jax.Array, stack: Tuple[int, ...],
+                       nb_i: int, nb_o: int, d_in: int,
+                       d_out: int) -> jax.Array:
+    """Inverse of :func:`gather_grad_tiles`: (T, bi, bo) tiles back to
+    the unpadded (*stack, d_in, d_out) gradient layout."""
+    bi, bo = tiles.shape[-2], tiles.shape[-1]
+    out = tiles.reshape(stack + (nb_i, nb_o, bi, bo))
+    ls = len(stack)
+    out = out.transpose(tuple(range(ls)) + (ls, ls + 2, ls + 1, ls + 3))
+    out = out.reshape(stack + (nb_i * bi, nb_o * bo))
+    return out[..., :d_in, :d_out]
+
+
 def block_precondition(g: jax.Array, a_inv: jax.Array,
                        g_inv: jax.Array,
                        axes=("data", "model")) -> jax.Array:
@@ -186,8 +231,7 @@ def block_precondition(g: jax.Array, a_inv: jax.Array,
     nb_i, nb_o = gp.shape[-2] // bi, gp.shape[-1] // bo
     gp = gp.reshape(stack + (nb_i, bi, nb_o, bo))
     gp = shard_hint(gp, *ns, ain, None, gout, None)
-    out = jnp.einsum("...iab,...ibjc,...jcd->...iajd", a_inv, gp, g_inv,
-                     preferred_element_type=jnp.float32)
+    out = two_sided_block_vmm(a_inv, gp, g_inv)
     out = shard_hint(out, *ns, ain, None, gout, None)
     out = out.reshape(stack + (nb_i * bi, nb_o * bo))
     out = shard_hint(out, *ns, ain, gout)

@@ -109,8 +109,10 @@ def param_sharding(params: Any, mesh) -> Any:
 
 def kfac_sharding(kstate: Any, params: Any, mesh) -> Any:
     """Sharding tree matching a ``KFACState``: factors/inverses follow
-    :func:`_factor_pspec`; momentum and Adam moments follow the params;
-    the step counter replicates."""
+    :func:`_factor_pspec`; momentum and Adam moments follow the params
+    — except the zero-size placeholders of the unused update path
+    (kfac.init allocates moments per path), which replicate; the step
+    counter replicates."""
     repl = NamedSharding(mesh, P())
 
     def factor_tree(tree: Dict[str, Dict[str, Any]]) -> Dict:
@@ -123,14 +125,24 @@ def kfac_sharding(kstate: Any, params: Any, mesh) -> Any:
             }
         return out
 
-    p_sh = param_sharding(params, mesh)
+    def moment_tree(tree: Any) -> Any:
+        # specs from the *state* leaf's own rank/shape: a placeholder
+        # is rank-1 size-0 and degrades to replication instead of
+        # inheriting the (now rank-mismatched) weight spec
+        def one(path, leaf):
+            return _sharding(mesh, _param_pspec(path_key(path),
+                                                len(leaf.shape)),
+                             leaf.shape)
+
+        return jax.tree_util.tree_map_with_path(one, tree)
+
     return kstate._replace(
         step=repl,
         factors=factor_tree(kstate.factors),
         inverses=factor_tree(kstate.inverses),
-        momentum=p_sh,
-        adam_mu=p_sh,
-        adam_nu=p_sh,
+        momentum=moment_tree(kstate.momentum),
+        adam_mu=moment_tree(kstate.adam_mu),
+        adam_nu=moment_tree(kstate.adam_nu),
     )
 
 

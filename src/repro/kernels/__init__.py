@@ -8,6 +8,9 @@ mapping argument):
   bitslice_mm       hi/lo bf16 sliced matmul, fp32 S+A in VMEM
   neumann_inv       VMEM-resident composed-precision block inverse
   fused_gram_solve  fused Gram-accumulate + inverse (never HBM the Gram)
+  fused_precond     pooled two-sided WU VMM (Eqn. 3) with the
+                    trust-region dot accumulated in the same pass —
+                    the fused VMM⊕INV crossbar-group image (Sec. V)
 
 Validated in interpret mode on CPU against ``ref.py`` oracles
 (tests/test_kernels.py sweeps shapes/dtypes).
@@ -16,6 +19,7 @@ Validated in interpret mode on CPU against ``ref.py`` oracles
 from repro.kernels.ops import (  # noqa: F401
     bitslice_mm,
     fused_gram_inv,
+    fused_precond,
     neumann_inv,
     on_tpu,
 )

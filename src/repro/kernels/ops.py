@@ -20,9 +20,11 @@ import jax.numpy as jnp
 
 from repro.kernels.bitslice_mm import bitslice_mm as _bitslice_mm
 from repro.kernels.fused_gram_solve import fused_gram_inv as _fused_gram_inv
+from repro.kernels.fused_precond import fused_precond as _fused_precond
 from repro.kernels.neumann_inv import neumann_inv as _neumann_inv
 
-__all__ = ["bitslice_mm", "neumann_inv", "fused_gram_inv", "on_tpu"]
+__all__ = ["bitslice_mm", "neumann_inv", "fused_gram_inv",
+           "fused_precond", "on_tpu"]
 
 
 def on_tpu() -> bool:
@@ -42,3 +44,9 @@ def neumann_inv(a: jax.Array, damping, **kw) -> jax.Array:
 def fused_gram_inv(a: jax.Array, **kw) -> jax.Array:
     kw.setdefault("interpret", not on_tpu())
     return _fused_gram_inv(a, **kw)
+
+
+def fused_precond(a_inv: jax.Array, g: jax.Array, g_inv: jax.Array,
+                  **kw):
+    kw.setdefault("interpret", not on_tpu())
+    return _fused_precond(a_inv, g, g_inv, **kw)

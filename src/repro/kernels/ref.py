@@ -91,6 +91,26 @@ def fused_gram_inv_ref(a: jax.Array, *, rel_damp: float = 0.03,
                            refine_steps=refine_steps)
 
 
+def fused_precond_ref(a_inv: jax.Array, g: jax.Array,
+                      g_inv: jax.Array):
+    """Oracle for kernels.fused_precond: identical hi/lo partial-product
+    set for both VMMs (left-first association, like
+    ``soi.two_sided_block_vmm``) and the same-pass fp32 tile dots."""
+    def one(a1, g1, gi1):
+        tmp = hilo_matmul(a1.astype(jnp.float32), g1.astype(jnp.float32))
+        out = hilo_matmul(tmp, gi1.astype(jnp.float32))
+        return out, jnp.sum(out * g1.astype(jnp.float32))
+
+    return jax.vmap(one)(a_inv, g, g_inv)
+
+
+def exact_two_sided(a_inv: jax.Array, g: jax.Array,
+                    g_inv: jax.Array) -> jax.Array:
+    """fp32 linalg reference bounding the bit-sliced kernel's error."""
+    return jnp.einsum("nab,nbc,ncd->nad", a_inv.astype(jnp.float32),
+                      g.astype(jnp.float32), g_inv.astype(jnp.float32))
+
+
 def exact_gram_inv(a: jax.Array, rel_damp: float = 0.03) -> jax.Array:
     """fp32 linalg reference for the *algorithmic* accuracy bound."""
     t = a.shape[0]

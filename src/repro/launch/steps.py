@@ -36,7 +36,7 @@ from repro.dist.api import (
     shard_like_params,
 )
 from repro.models import lm, whisper
-from repro.solve import invert_factor_tree, make_plan
+from repro.solve import invert_factor_tree, make_plan, make_wu_plan
 
 
 class TrainState(NamedTuple):
@@ -142,7 +142,23 @@ def _split_microbatches(batch, accum: int):
     return out
 
 
-def make_train_step(cfg: ModelConfig, kcfg: KFACConfig) -> Callable:
+def make_wu_plan_for(cfg: ModelConfig, kcfg: KFACConfig, *,
+                     ndev: int = 1,
+                     abstract_state: Optional[TrainState] = None):
+    """Pooled WU plan for this (arch, kcfg) from abstract factor shapes
+    (no allocation). The same plan object feeds ``make_train_step`` and
+    the distributed fused-WU solver (``repro.solve.fused_wu``)."""
+    ab = abstract_state or abstract_train_state(cfg, kcfg)
+    return make_wu_plan(kfac_specs(cfg), ab.kfac.factors, kcfg,
+                        ndev=ndev)
+
+
+def make_train_step(cfg: ModelConfig, kcfg: KFACConfig,
+                    wu_plan=None) -> Callable:
+    """One FP+BP+WU step. ``wu_plan`` (``repro.solve.WUPlan``) routes
+    the WU graph through the pooled fused program — one batched
+    VMM⊕INV per (bi, bo) pool plus fused elementwise chains — instead
+    of the per-leaf loop; outputs are bitwise identical."""
     mod = model_module(cfg)
     specs = kfac_specs(cfg)
     accum = max(cfg.train_accum, 1)
@@ -175,7 +191,8 @@ def make_train_step(cfg: ModelConfig, kcfg: KFACConfig) -> Callable:
             (grads, loss), _ = jax.lax.scan(
                 body, (zeros, jnp.zeros((), jnp.float32)), micro)
         params2, kstate2 = kfac.apply_updates(
-            state.params, grads, state.kfac, specs, kcfg)
+            state.params, grads, state.kfac, specs, kcfg,
+            wu_plan=wu_plan)
         gnorm = jnp.sqrt(sum(
             jnp.sum(jnp.square(g.astype(jnp.float32)))
             for g in jax.tree.leaves(grads)))

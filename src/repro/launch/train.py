@@ -33,6 +33,7 @@ from repro.core import kfac
 from repro.core.kfac import KFACConfig
 from repro.data import SyntheticTokens
 from repro.dist import sharding as shard_rules
+from repro.dist.api import mesh_ndev
 from repro.launch import steps as steps_mod
 from repro.launch.steps import TrainState
 from repro.runtime import DeviceLoss, LoopConfig, TrainLoop, elastic_mesh
@@ -66,6 +67,10 @@ class KFACProgram:
     ``async_inv``: staleness-tolerant double-buffered refresh — step N
     preconditions with the inverses computed at step N - inv_every
     while the next refresh overlaps the following train steps.
+    ``fused_wu``: pooled fused WU graph (default) — precondition +
+    update run as one batched VMM⊕INV program per (bi, bo) block pool
+    instead of a per-leaf loop (bitwise identical; ``--no-fused-wu``
+    keeps the legacy path for parity checks).
     """
 
     cfg: Any
@@ -73,6 +78,7 @@ class KFACProgram:
     seed: int = 0
     dist_inv: bool = False
     async_inv: bool = False
+    fused_wu: bool = True
 
     def __post_init__(self):
         self._refresher = None
@@ -99,7 +105,11 @@ class KFACProgram:
         ab = steps_mod.abstract_train_state(self.cfg, self.kcfg)
         st_shard = self._shardings(mesh, ab)
         b_spec = None      # let jit shard the host batch by its sharding
-        train = jax.jit(steps_mod.make_train_step(self.cfg, self.kcfg),
+        wu_plan = steps_mod.make_wu_plan_for(
+            self.cfg, self.kcfg, ndev=mesh_ndev(mesh),
+            abstract_state=ab) if self.fused_wu else None
+        train = jax.jit(steps_mod.make_train_step(self.cfg, self.kcfg,
+                                                  wu_plan=wu_plan),
                         in_shardings=(st_shard, b_spec),
                         out_shardings=(st_shard, None),
                         donate_argnums=(0,))
@@ -253,6 +263,11 @@ def main(argv=None):
                     default=False,
                     help="staleness-tolerant double-buffered inverse "
                          "refresh overlapping the train steps")
+    ap.add_argument("--fused-wu", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="pooled fused WU graph: one batched VMM⊕INV "
+                         "program for precondition+update (bitwise "
+                         "identical to the per-leaf path it replaces)")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=20)
     ap.add_argument("--inject-failure-at", type=int, default=-1,
@@ -272,7 +287,8 @@ def main(argv=None):
     if args.optimizer == "kfac":
         program = KFACProgram(cfg, kcfg, seed=args.seed,
                               dist_inv=args.dist_inv,
-                              async_inv=args.async_inv)
+                              async_inv=args.async_inv,
+                              fused_wu=args.fused_wu)
     else:
         program = SGDProgram(cfg, lr=args.lr, seed=args.seed)
 

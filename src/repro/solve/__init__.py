@@ -17,12 +17,24 @@ TPU-mesh image of that mapping:
                  preconditions with the inverses computed at step
                  N - inv_every while the next refresh is in flight
                  (INV groups running concurrently with FP/BP/WU)
+  fused_wu       fused INV→VMM: each device runs the WU VMMs on the
+                 blocks it just inverted (one collective routes the
+                 intermediates to the G owners) instead of waiting on
+                 the inverse all-gather — the paper's VMM⊕INV fused
+                 crossbar groups (Sec. V); the WU *plan* that pools
+                 every gradient tile lives in ``partition.make_wu_plan``
 """
 
 from repro.solve.async_refresh import AsyncInverseRefresher  # noqa: F401
 from repro.solve.block_solver import invert_factor_tree  # noqa: F401
+from repro.solve.fused_wu import (  # noqa: F401
+    DEFAULT_DIST_MODE,
+    refresh_and_precondition,
+)
 from repro.solve.partition import (  # noqa: F401
     Plan,
+    WUPlan,
     inverse_block_flops,
     make_plan,
+    make_wu_plan,
 )

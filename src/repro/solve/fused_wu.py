@@ -1,0 +1,206 @@
+"""Fused INV→VMM: distributed refresh + pooled preconditioning in one
+shard_map program.
+
+The paper's mapping scheme wires INV crossbar groups straight into the
+weight-update VMM crossbars (Sec. V): an SOI inverse feeds its VMMs the
+moment it settles, never round-tripping through memory. The TPU gap
+this module closes: the block-parallel refresh (``block_solver``)
+all-gathers **every** inverse shard before a single WU VMM runs. Here
+each device, having just inverted its plan-owned blocks,
+
+  1. immediately runs the **left (A-side) VMM** on the gradient tiles
+     whose A blocks it owns (the WU plan lays tiles device-major by
+     A-owner, static indices);
+  2. a **single collective** (one tiled all-gather of the small
+     ``A^{-1} g`` intermediates) routes them to the G-inverse owners;
+  3. each device runs the **right (G-side) VMM** for the tiles whose G
+     blocks it owns, against its *local* fresh inverses;
+  4. outputs (and, for the optimizer state, the inverse shards) are
+     gathered — but the WU VMMs no longer sit behind the inverse
+     all-gather; it overlaps them inside the same program.
+
+``mode="gather"`` is the staged baseline (all-gather inverses, then the
+replicated pooled VMM) the fused path is benchmarked against in
+``benchmarks/wu_fusion.py`` — the faster one on the measured mesh is
+``DEFAULT_DIST_MODE``. Both are bitwise identical to the legacy
+per-leaf WU path on the composed method (tests pin this): per-tile math
+is the same left-first association, and collectives only move bits.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Mapping, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core import soi
+from repro.core.kfac import (
+    KFACConfig,
+    invert_blocks_flat,
+    precondition_pooled,
+)
+from repro.dist.api import mesh_axes, mesh_ndev
+from repro.dist.sharding import solve_pool_sharding
+from repro.solve.block_solver import _pool_group, _scatter_group
+from repro.solve.partition import WUPlan
+
+__all__ = ["refresh_and_precondition", "DEFAULT_DIST_MODE"]
+
+# benchmarks/wu_fusion.py (forced 4-device host mesh): the owner-routed
+# fused program beats gather-then-replicated-VMM once per-device block
+# counts matter; on tiny CPU meshes the two are within noise, so the
+# fused dataflow — the paper's mapping — is the default.
+DEFAULT_DIST_MODE = "owner"
+
+
+def _gather_tiles_concat(grads_by_name: Mapping[str, jax.Array],
+                         grp) -> jax.Array:
+    """One WU group's gradient tiles in concat (plan) order."""
+    tiles = [soi.gather_grad_tiles(grads_by_name[l.name], l.stack,
+                                   grp.bi, grp.bo)
+             for l in grp.leaves]
+    return tiles[0] if len(tiles) == 1 else jnp.concatenate(tiles)
+
+
+def _devmajor_tiles(tiles: jax.Array, grp):
+    """Concat-order tiles -> device-major by A-owner (+ zero pad tile),
+    with the per-row static index arrays the shard_map body consumes."""
+    ndev, mt = grp.slots.shape
+    ext = jnp.concatenate([tiles, jnp.zeros_like(tiles[:1])])
+    idx = grp.slots.copy()
+    idx[idx < 0] = tiles.shape[0]               # -> the zero pad tile
+    dm = ext[idx.reshape(-1)].reshape(ndev, mt, grp.bi, grp.bo)
+
+    def take(per_tile, slots):
+        out = np.zeros(slots.shape, np.int32)
+        live = slots >= 0
+        out[live] = per_tile[slots[live]]
+        return out
+
+    a_slot = take(grp.a_slot, grp.slots)                 # (ndev, mt)
+    # right side: device-major by G-owner; each entry addresses the
+    # flattened (ndev*mt) A-major intermediate pool
+    sel = take(grp.gather_back, grp.g_slots)             # (ndev, mg)
+    g_slot = take(grp.g_slot, grp.g_slots)               # (ndev, mg)
+    return dm, a_slot, sel, g_slot
+
+
+def _scatter_pre(grp, ordered: jax.Array) -> dict:
+    """Concat-order preconditioned tiles -> per-leaf gradient layout."""
+    out, ofs = {}, 0
+    for l in grp.leaves:
+        n = l.n_tiles
+        out[l.name] = soi.scatter_grad_tiles(
+            ordered[ofs:ofs + n], l.stack, l.nb_i, l.nb_o, l.d_in,
+            l.d_out)
+        ofs += n
+    return out
+
+
+def refresh_and_precondition(
+    factors: Mapping[str, Mapping[str, Any]],
+    grads_by_name: Mapping[str, jax.Array],
+    cfg: KFACConfig,
+    wu_plan: WUPlan,
+    *,
+    mesh=None,
+    mode: Optional[str] = None,
+):
+    """Invert every SOI block *and* precondition every factored
+    gradient in one program: ``(inverses_tree, pre_by_name)``.
+
+    Replicated (no mesh / 1 device): pooled local inversion + the
+    pooled VMM — the single-process image of the fused graph, bitwise
+    identical to ``kfac.refresh_inverses`` + ``kfac.precondition``.
+    """
+    mode = mode or DEFAULT_DIST_MODE
+    if mode not in ("gather", "owner"):
+        raise ValueError(f"unknown dist mode {mode!r}")
+    plan = wu_plan.inv_plan
+    distributed = mesh is not None and plan.ndev > 1
+    if distributed and plan.ndev != mesh_ndev(mesh):
+        raise ValueError(
+            f"wu_plan was built for {plan.ndev} devices but the mesh "
+            f"has {mesh_ndev(mesh)}")
+
+    if not distributed or mode == "gather":
+        from repro.solve.block_solver import invert_factor_tree
+        inv = invert_factor_tree(factors, cfg, mesh=mesh,
+                                 plan=plan if distributed else None)
+        pre = precondition_pooled(grads_by_name, inv, wu_plan)
+        return inv, pre
+
+    axes = mesh_axes(mesh)
+    pool_sh = solve_pool_sharding(mesh)
+
+    # device-major factor pools (identical to the pure refresh program)
+    pooled = tuple(_pool_group(factors, cfg, g) for g in plan.groups)
+    blocks = tuple(jax.lax.with_sharding_constraint(p[0], pool_sh)
+                   for p in pooled)
+    lams = tuple(jax.lax.with_sharding_constraint(p[1], pool_sh)
+                 for p in pooled)
+    bs_order = tuple(g.bs for g in plan.groups)
+
+    # device-major gradient tiles + routing indices per WU group; the
+    # index arrays ride shard_map like the tiles, so each device reads
+    # its own row — no in-body device arithmetic
+    tiles_dm, a_slots, sels, g_slots = [], [], [], []
+    for grp in wu_plan.groups:
+        dm, a_slot, sel, g_slot = _devmajor_tiles(
+            _gather_tiles_concat(grads_by_name, grp), grp)
+        tiles_dm.append(jax.lax.with_sharding_constraint(dm, pool_sh))
+        a_slots.append(jnp.asarray(a_slot))
+        sels.append(jnp.asarray(sel))
+        g_slots.append(jnp.asarray(g_slot))
+    tiles_dm, a_slots = tuple(tiles_dm), tuple(a_slots)
+    sels, g_slots = tuple(sels), tuple(g_slots)
+
+    def body(blocks, lams, tiles, a_slot_r, sel_r, g_slot_r):
+        # 1. invert the locally-owned blocks (shared primitive)
+        local_inv = {}
+        for bs, b, l in zip(bs_order, blocks, lams):
+            local_inv[bs] = invert_blocks_flat(b[0], l[0], cfg)
+        # 2.-3. left VMM on fresh local inverses, route intermediates
+        # to the G owners with ONE collective, right VMM locally
+        outs = []
+        for grp, t, a_slot, sel, g_slot in zip(
+                wu_plan.groups, tiles, a_slot_r, sel_r, g_slot_r):
+            tmp = jnp.einsum("nab,nbc->nac",
+                             local_inv[grp.bi][a_slot[0]], t[0],
+                             preferred_element_type=jnp.float32)
+            tmp_all = jax.lax.all_gather(
+                tmp[None], axis_name=axes, tiled=True)
+            tmp_flat = tmp_all.reshape((-1,) + tmp_all.shape[2:])
+            o = jnp.einsum("nac,ncd->nad", tmp_flat[sel[0]],
+                           local_inv[grp.bo][g_slot[0]],
+                           preferred_element_type=jnp.float32)
+            outs.append(jax.lax.all_gather(
+                o[None], axis_name=axes, tiled=True))
+        # 4. inverse shards for the optimizer state — gathered here,
+        # overlapping the VMMs instead of gating them
+        inv_gathered = tuple(jax.lax.all_gather(
+            local_inv[bs][None], axis_name=axes, tiled=True)
+            for bs in bs_order)
+        return inv_gathered, tuple(outs)
+
+    inv_gathered, outs = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(axes), P(axes), P(axes), P(axes), P(axes),
+                  P(axes)),
+        out_specs=(P(), P()), check_vma=False)(
+            blocks, lams, tiles_dm, a_slots, sels, g_slots)
+
+    inverses: dict = {}
+    for g, got in zip(plan.groups, inv_gathered):
+        for name, dd in _scatter_group(factors, g, got).items():
+            inverses.setdefault(name, {}).update(dd)
+
+    pre: dict = {}
+    for grp, o_all in zip(wu_plan.groups, outs):
+        flat = o_all.reshape((-1,) + o_all.shape[2:])
+        ordered = flat[jnp.asarray(grp.g_gather_back)]
+        pre.update(_scatter_pre(grp, ordered))
+    return inverses, pre

@@ -23,12 +23,13 @@ whole network into one batched inversion is what makes per-device count
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Any, Mapping, Tuple
 
 import numpy as np
 
 from repro.core.kfac import KFACConfig
-from repro.core.soi import leaf_block_count
+from repro.core.soi import LinearSpec, leaf_block_count
 
 
 def inverse_block_flops(bs: int, cfg: KFACConfig) -> float:
@@ -172,3 +173,270 @@ def make_plan(factors: Mapping[str, Mapping[str, Any]], ndev: int,
     return Plan(ndev=ndev, groups=tuple(groups),
                 device_blocks=tuple(counts),
                 device_flops=tuple(loads))
+
+
+# ---------------------------------------------------------------------------
+# WU plan: pooled fused preconditioning (the paper's VMM⊕INV fusion)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class WULeaf:
+    """Blocked-gradient geometry of one factored weight.
+
+    The gradient ``(*stack, d_in, d_out)`` pads/blocks to
+    ``(*stack, nb_i, bi, nb_o, bo)``; its ``prod(stack)*nb_i*nb_o``
+    tiles enumerate C-order over (stack..., i, j). ``a_owner`` is the
+    leaf whose ``A_inv`` preconditions the input side
+    (``share_a_with`` resolved)."""
+
+    name: str
+    a_owner: str
+    stack: Tuple[int, ...]
+    nb_i: int
+    nb_o: int
+    d_in: int
+    d_out: int
+
+    @property
+    def n_stack(self) -> int:
+        return math.prod(self.stack) if self.stack else 1
+
+    @property
+    def n_tiles(self) -> int:
+        return self.n_stack * self.nb_i * self.nb_o
+
+
+@dataclasses.dataclass(frozen=True)
+class StackedGroup:
+    """Leaves sharing one blocked geometry ``(nb_i, bi, nb_o, bo)``.
+
+    The local fused WU program concatenates these along the flattened
+    stack axis and runs ONE two-sided block VMM for the whole group —
+    a pure-concat pool (no index gathers: on CPU XLA a per-tile gather
+    lowers to serial calls that eat the fusion win; the tile-indexed
+    layout below is reserved for the shard_map owner path, where
+    device-major placement needs it). ``pooled`` is False when the
+    group is a single leaf or its gradient bytes exceed the pooling
+    cap — concatenating multi-MB expert gradients costs more in copies
+    than the saved per-leaf dispatches (EXPERIMENTS.md §Perf 4.2) —
+    in which case the program falls back to per-leaf einsums for the
+    group's members (still inside the same fused program)."""
+
+    nb_i: int
+    bi: int
+    nb_o: int
+    bo: int
+    members: Tuple[WULeaf, ...]
+    pooled: bool
+
+
+def _owner_table(group: GroupPlan) -> np.ndarray:
+    """Device owning each concatenated block of an INV group."""
+    return (group.gather_back // group.per_device).astype(np.int32)
+
+
+def _devmajor(assign: np.ndarray, ndev: int):
+    """Device-major layout of an item->device assignment: ``slots``
+    (ndev, m) item indices (-1 pads) + ``gather_back`` (N,) undoing it
+    — the same bookkeeping shape as :class:`GroupPlan`."""
+    n = assign.shape[0]
+    m = int(max(np.bincount(assign, minlength=ndev).max(), 1)) if n \
+        else 1
+    slots = np.full((ndev, m), -1, np.int32)
+    gather_back = np.empty(n, np.int32)
+    fill = [0] * ndev
+    for t in range(n):
+        d = int(assign[t])
+        slots[d, fill[d]] = t
+        gather_back[t] = d * m + fill[d]
+        fill[d] += 1
+    return slots, gather_back
+
+
+@dataclasses.dataclass(frozen=True)
+class WUGroupPlan:
+    """All same-``(bi, bo)`` gradient tiles of the network, pooled.
+
+    ``a_src``/``g_src`` index each tile's ``A_inv``/``G_inv`` block
+    inside the per-``bs`` inverse pools of the owning :class:`Plan`
+    (concatenation order of that group's ``leaves`` — the exact layout
+    the block-parallel solver pools device-major, so in distributed
+    mode a tile's left VMM can run on the device that just *inverted*
+    its A block, no inverse all-gather in between).
+
+    ``slots``/``gather_back``: tiles device-major by A-block owner (the
+    left-VMM placement). ``g_slots``/``g_gather_back``: the same tiles
+    device-major by G-block owner (the right-VMM placement after the
+    one intermediate-routing collective). ``a_slot``/``g_slot``: the
+    tile's block position *within its owner's row* of the device-major
+    inverse pool (``Plan.groups[...].slots`` layout).
+    """
+
+    bi: int
+    bo: int
+    leaves: Tuple[WULeaf, ...]
+    a_src: np.ndarray
+    g_src: np.ndarray
+    slots: np.ndarray
+    gather_back: np.ndarray
+    a_slot: np.ndarray
+    g_slots: np.ndarray
+    g_gather_back: np.ndarray
+    g_slot: np.ndarray
+
+    @property
+    def n_tiles(self) -> int:
+        return int(sum(l.n_tiles for l in self.leaves))
+
+
+@dataclasses.dataclass(frozen=True)
+class WUPlan:
+    """Static pooled layout of the whole WU graph (Eqn. 3 for every
+    factored weight as batched two-sided block VMMs).
+
+    Two views of the same tile set:
+      ``stacked``  concat-pooled geometry groups for the local fused
+                   program (gather-free);
+      ``groups``   tile-indexed device-major pools for the distributed
+                   fused INV→VMM program (``solve.fused_wu``) and the
+                   Pallas kernel (``kernels.fused_precond``).
+    """
+
+    ndev: int
+    inv_plan: Plan
+    groups: Tuple[WUGroupPlan, ...]
+    stacked: Tuple[StackedGroup, ...]
+
+    @property
+    def total_tiles(self) -> int:
+        return int(sum(g.n_tiles for g in self.groups))
+
+    def summary(self) -> dict:
+        return {
+            "ndev": self.ndev,
+            "total_tiles": self.total_tiles,
+            "groups": [{"bi": g.bi, "bo": g.bo, "n_tiles": g.n_tiles,
+                        "n_leaves": len(g.leaves)}
+                       for g in self.groups],
+            "stacked": [{"geom": (s.nb_i, s.bi, s.nb_o, s.bo),
+                         "n_members": len(s.members),
+                         "pooled": s.pooled}
+                        for s in self.stacked],
+        }
+
+
+#: Multi-member stacked groups above this many gradient bytes run
+#: per-leaf instead of concat-pooled: the pool build is ~3 extra
+#: copies of the group, which beats per-leaf dispatch overhead for
+#: many small leaves but loses on multi-MB (MoE expert) gradients
+#: (measured in benchmarks/wu_fusion.py; EXPERIMENTS.md §Perf 4.2).
+POOL_BYTES_CAP = 4 << 20
+
+
+def make_wu_plan(specs: Mapping[str, LinearSpec],
+                 factors: Mapping[str, Mapping[str, Any]],
+                 cfg: KFACConfig, *, ndev: int = 1,
+                 inv_plan: Plan | None = None,
+                 pool_bytes_cap: int = POOL_BYTES_CAP) -> WUPlan:
+    """Pool every factored gradient's blocks across layers.
+
+    ``factors``: the ``KFACState.factors`` layout (arrays or
+    ShapeDtypeStructs — shapes only are read, so the plan can be built
+    before any state exists). Tiles whose A factor is shared
+    (``share_a_with``) index the owning leaf's blocks; per-leaf block
+    sizes come from the factor shapes (``soi.block_size_for``
+    geometry), so padded (non-divisible d) leaves pool like any other.
+
+    The WU plan embeds (or builds) the INV :class:`Plan` for the same
+    factor tree: ``a_src``/``g_src`` address the *same* per-``bs``
+    pooled block layout the distributed solver produces, which is what
+    lets the fused INV→VMM path consume inverse shards in place.
+    """
+    plan = inv_plan or make_plan(factors, ndev, cfg)
+    if plan.ndev != ndev:
+        raise ValueError(
+            f"inv_plan was built for {plan.ndev} devices, not {ndev}")
+
+    # (name, side) -> (bs, offset into that bs pool's concat order)
+    offsets: dict = {}
+    for g in plan.groups:
+        ofs = 0
+        for leaf, cnt in zip(g.leaves, g.leaf_counts):
+            offsets[leaf] = (g.bs, ofs)
+            ofs += cnt
+
+    pools: dict = {}
+    by_geom: dict = {}
+    for name in sorted(specs):
+        spec = specs[name]
+        a_owner = spec.share_a_with or name
+        if (a_owner, "A") not in offsets or (name, "G") not in offsets:
+            raise ValueError(
+                f"factor tree is missing A/G leaves for {name!r} "
+                f"(A owner {a_owner!r})")
+        a_shape = tuple(factors[a_owner]["A"].shape)
+        g_shape = tuple(factors[name]["G"].shape)
+        stack = a_shape[:-3]
+        if g_shape[:-3] != stack:
+            raise ValueError(
+                f"{name!r}: A/G stack dims disagree "
+                f"({a_shape} vs {g_shape})")
+        bi, nb_i = a_shape[-1], a_shape[-3]
+        bo, nb_o = g_shape[-1], g_shape[-3]
+        leaf = WULeaf(name=name, a_owner=a_owner, stack=stack,
+                      nb_i=nb_i, nb_o=nb_o, d_in=spec.d_in,
+                      d_out=spec.d_out)
+        s_count = math.prod(stack) if stack else 1
+        bs_a, a_off = offsets[(a_owner, "A")]
+        bs_g, g_off = offsets[(name, "G")]
+        if (bs_a, bs_g) != (bi, bo):
+            raise ValueError(
+                f"{name!r}: inv_plan pools its factors at block sizes "
+                f"({bs_a}, {bs_g}) but the factor shapes say "
+                f"({bi}, {bo}) — the plan was built for a different "
+                f"factor tree")
+        # tile t = (s, i, j) C-order; block (s, i) of the A leaf sits at
+        # a_off + s*nb_i + i in the bs==bi pool (leaf_flat order)
+        s_ix = np.repeat(np.arange(s_count), nb_i * nb_o)
+        i_ix = np.tile(np.repeat(np.arange(nb_i), nb_o), s_count)
+        j_ix = np.tile(np.arange(nb_o), s_count * nb_i)
+        entry = pools.setdefault((bi, bo), {"leaves": [], "a": [], "g": []})
+        entry["leaves"].append(leaf)
+        entry["a"].append((a_off + s_ix * nb_i + i_ix).astype(np.int32))
+        entry["g"].append((g_off + s_ix * nb_o + j_ix).astype(np.int32))
+        by_geom.setdefault((nb_i, bi, nb_o, bo), []).append(leaf)
+
+    groups = []
+    for bi, bo in sorted(pools):
+        entry = pools[(bi, bo)]
+        a_src = np.concatenate(entry["a"])
+        g_src = np.concatenate(entry["g"])
+        a_group = next(g for g in plan.groups if g.bs == bi)
+        g_group = next(g for g in plan.groups if g.bs == bo)
+        a_own = _owner_table(a_group)
+        g_own = _owner_table(g_group)
+        slots, gather_back = _devmajor(a_own[a_src], plan.ndev)
+        g_slots, g_gather_back = _devmajor(g_own[g_src], plan.ndev)
+        # block position within the owner's device-major inverse row
+        a_slot = (a_group.gather_back[a_src]
+                  % a_group.per_device).astype(np.int32)
+        g_slot = (g_group.gather_back[g_src]
+                  % g_group.per_device).astype(np.int32)
+        groups.append(WUGroupPlan(
+            bi=int(bi), bo=int(bo), leaves=tuple(entry["leaves"]),
+            a_src=a_src, g_src=g_src,
+            slots=slots, gather_back=gather_back, a_slot=a_slot,
+            g_slots=g_slots, g_gather_back=g_gather_back,
+            g_slot=g_slot))
+
+    stacked = []
+    for (nb_i, bi, nb_o, bo) in sorted(by_geom):
+        members = tuple(by_geom[(nb_i, bi, nb_o, bo)])
+        group_bytes = 4 * sum(m.n_tiles for m in members) * bi * bo
+        stacked.append(StackedGroup(
+            nb_i=int(nb_i), bi=int(bi), nb_o=int(nb_o), bo=int(bo),
+            members=members,
+            pooled=len(members) > 1 and group_bytes <= pool_bytes_cap))
+
+    return WUPlan(ndev=plan.ndev, inv_plan=plan, groups=tuple(groups),
+                  stacked=tuple(stacked))
