@@ -1,10 +1,19 @@
 """Benchmark driver: one module per paper table/figure.
 
   python -m benchmarks.run            # everything
-  python -m benchmarks.run --fast     # skip the slow LM-convergence run
+  python -m benchmarks.run --fast     # skip the slow subprocess/LM runs
 
-Prints each table as CSV plus a final reproduction scorecard comparing
-our derived headline numbers against the paper's reported values.
+Prints each table as CSV plus a final reproduction scorecard. Scorecard
+schema contract (what trajectory tooling can rely on):
+
+* every module emits exactly ONE status row — ``{"metric": <module>,
+  "status": ok|failed|skipped, "note": ...}`` — under the same name in
+  both modes, so the module-row set never changes between ``--fast``
+  and full runs;
+* headline *value* rows (``paper`` vs ``ours`` comparisons, also
+  ``status=ok``) additionally appear for modules that ran and expose a
+  ``headline()``; a skipped module's values are simply absent — its
+  status row is the stable placeholder.
 """
 
 from __future__ import annotations
@@ -24,13 +33,16 @@ def main(argv=None):
 
     from benchmarks import (
         area,
+        dist_inverse,
         dse,
         energy,
         inv_convergence,
         kernel_bench,
         kfac_convergence,
         mapping_impact,
+        pipeline_bench,
         roofline,
+        serve_engine,
         soi_precision,
         soi_sizes,
         speedup,
@@ -40,20 +52,33 @@ def main(argv=None):
     scorecard = []
     failures = 0
 
-    def run(name, fn):
+    def run(name, fn, *, skip=None, note=""):
         nonlocal failures
+        if skip:
+            print(f"# [{name}] SKIPPED: {skip}\n")
+            scorecard.append({"metric": name, "status": "skipped",
+                              "note": skip})
+            return
         t0 = time.monotonic()
         try:
             fn()
             print(f"# [{name}] done in {time.monotonic() - t0:.1f}s\n")
+            scorecard.append({"metric": name, "status": "ok",
+                              "note": note})
         except Exception:
             failures += 1
             print(f"# [{name}] FAILED:\n{traceback.format_exc()}\n")
+            scorecard.append({"metric": name, "status": "failed",
+                              "note": ""})
 
     def score(entries):
         if isinstance(entries, dict):
             entries = [entries]
+        for e in entries:
+            e.setdefault("status", "ok")
         scorecard.extend(entries)
+
+    fast_skip = "--fast: slow module (subprocess re-import / LM run)"
 
     run("table1_soi_sizes", soi_sizes.main)
     run("table2_area", area.main)
@@ -72,14 +97,29 @@ def main(argv=None):
     run("kernel_bench", kernel_bench.main)
     # fused vs per-leaf WU graph; writes BENCH_wu_fusion.json
     run("wu_fusion", lambda: wu_fusion.main([]))
-    if not args.fast:
+    # continuous-batching engine vs static decode (CPU-local)
+    run("serve_engine", lambda: serve_engine.main([]))
+    # forced-multidevice children (each spawns its own 4-device guard
+    # subprocess — the pattern shared with grad_compression)
+    if args.fast:
+        run("dist_inverse", dist_inverse.main, skip=fast_skip)
+        run("pipeline_bench", pipeline_bench.main, skip=fast_skip)
+        run("grad_compression_dcn", None, skip=fast_skip)
+        run("sec6c_kfac_convergence",
+            lambda: print_csv("sec6c_kfac_convergence",
+                              kfac_convergence.rows(fast=True)),
+            note="quadratic probe only (--fast)")
+    else:
+        run("dist_inverse", dist_inverse.main)
+
+        # pipelined FP/BP vs the pimsim bubble model;
+        # writes BENCH_pipeline.json
+        def _pb():
+            score(pipeline_bench.headline(pipeline_bench.main()))
+
+        run("pipeline_bench", _pb)
         from benchmarks import grad_compression
         run("grad_compression_dcn", grad_compression.main)
-    if args.fast:
-        run("sec6c_kfac_convergence(quadratic only)",
-            lambda: print_csv("sec6c_kfac_convergence",
-                              kfac_convergence.rows(fast=True)))
-    else:
         run("sec6c_kfac_convergence", kfac_convergence.main)
     run("roofline", roofline.main)
 

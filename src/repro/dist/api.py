@@ -23,6 +23,7 @@ Contract (consumed by models/*, core/soi, core/kfac, launch/steps):
 
 from __future__ import annotations
 
+import contextlib
 import math
 from typing import Any, Optional, Tuple
 
@@ -32,12 +33,46 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.compat import active_mesh
 
 POD = "pod"
+STAGE = "stage"
 DATA = "data"
 MODEL = "model"
 
 #: Batch dims shard over the pure data-parallel axes (outer ``pod`` on
-#: multi-pod meshes, inner ``data`` everywhere).
+#: multi-pod meshes, inner ``data`` everywhere). The ``stage``
+#: (pipeline) axis never carries batch: every stage sees every
+#: microbatch, offset in time by the schedule (repro.pipeline).
 BATCH_AXES: Tuple[str, ...] = (POD, DATA)
+
+# Depth counter for :func:`hint_guard` regions (tracing is synchronous,
+# so a plain module counter is race-free).
+_HINTS_OFF = 0
+
+
+@contextlib.contextmanager
+def hint_guard():
+    """Disable :func:`shard_hint` inside the ``with`` body.
+
+    Inside a ``shard_map`` region every mesh axis is *manual*, and a
+    ``with_sharding_constraint`` naming those axes is illegal — but the
+    model code hints unconditionally. The pipeline executor
+    (``repro.pipeline.schedule``) traces the per-stage model body under
+    this guard: there the shard_map program itself is the layout, so
+    hints degrade to identity exactly like they do with no mesh active.
+    """
+    global _HINTS_OFF
+    _HINTS_OFF += 1
+    try:
+        yield
+    finally:
+        _HINTS_OFF -= 1
+
+
+def in_hint_guard() -> bool:
+    """True while tracing inside a :func:`hint_guard` (manual shard_map)
+    region — model code that would open nested shard_maps or emit
+    sharding constraints (e.g. the MoE expert-parallel fast path) must
+    take its portable path instead."""
+    return bool(_HINTS_OFF)
 
 
 def _norm_entry(entry) -> Tuple[str, ...]:
@@ -74,7 +109,10 @@ def clean_spec(spec, shape, mesh) -> P:
 
 def shard_hint(x: Any, *axes) -> Any:
     """Hint ``x``'s layout: one entry per leading dim (None | axis name |
-    tuple of axis names). Identity when no mesh is active."""
+    tuple of axis names). Identity when no mesh is active or inside a
+    :func:`hint_guard` (manual shard_map) region."""
+    if _HINTS_OFF:
+        return x
     mesh = active_mesh()
     if mesh is None or not axes or not hasattr(x, "ndim"):
         return x

@@ -38,6 +38,7 @@ from repro.dist.api import (
     BATCH_AXES,
     DATA,
     MODEL,
+    STAGE,
     clean_spec,
     mesh_axes,
     path_key,
@@ -58,16 +59,26 @@ _MOE_EXPERT = {"wg", "wu", "wd"}
 
 def _param_pspec(name: str, ndim: int) -> Tuple[Optional[str], ...]:
     """Partition spec (as a plain tuple) for the weight at path ``name``
-    with ``ndim`` dims. Leading (stack) dims replicate except the MoE
-    expert dim, which rides ``model``."""
+    with ``ndim`` dims. The leading dim of the scanned layer stack
+    (``layers/...``) rides the pipeline ``stage`` axis (each stage
+    device holds only its contiguous layer slice — repro.pipeline;
+    ``clean_spec`` drops the axis on stage-less meshes, so non-pipeline
+    layouts are unchanged). Remaining stack dims replicate except the
+    MoE expert dim, which rides ``model``."""
     base = name.rsplit("/", 1)[-1]
+
+    def staged(spec: Tuple[Optional[str], ...]):
+        if name.startswith("layers/") and ndim >= 2 and spec[0] is None:
+            return (STAGE,) + spec[1:]
+        return spec
+
     if ndim < 2:
         return (None,) * ndim
     if "moe/" in name and base in _MOE_EXPERT and ndim >= 3:
         lead = (None,) * (ndim - 3)
         if base in _ROW:
-            return lead + (MODEL, None, DATA)
-        return lead + (MODEL, DATA, None)
+            return staged(lead + (MODEL, None, DATA))
+        return staged(lead + (MODEL, DATA, None))
     if base == "embed":
         two = (MODEL, DATA)
     elif base == "lm_head":
@@ -77,8 +88,8 @@ def _param_pspec(name: str, ndim: int) -> Tuple[Optional[str], ...]:
     elif base in _ROW:
         two = (MODEL, DATA)
     else:
-        return (None,) * ndim
-    return (None,) * (ndim - 2) + two
+        return staged((None,) * ndim)
+    return staged((None,) * (ndim - 2) + two)
 
 
 def _factor_pspec(shape: Tuple[int, ...], side: str,

@@ -6,6 +6,12 @@ data-parallel outer axis so the only cross-pod (DCN) collective is the
 once-per-step gradient all-reduce (optionally int8-compressed,
 ``dist/compression.py``).
 
+Pipeline (``pp > 1``): a ``stage`` axis slots between ``pod`` and
+``data`` — (pod, stage, data, model) — holding one contiguous layer
+slice per stage (``repro.pipeline``). Stage is outer to ``data`` so the
+per-tick ppermute transfers ride the fast intra-slice links while the
+``pod`` boundary still only carries the per-step gradient all-reduce.
+
 Functions, not module constants: importing this module must never touch
 jax device state (smoke tests run on 1 CPU device; only
 ``launch/dryrun.py`` forces the 512-device host platform).
@@ -16,9 +22,16 @@ from __future__ import annotations
 import jax
 
 
-def make_production_mesh(*, multi_pod: bool = False):
+def make_production_mesh(*, multi_pod: bool = False, pp: int = 1):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    if pp > 1:
+        d = shape[-2]
+        if d % pp:
+            raise ValueError(
+                f"pp={pp} does not divide the data axis ({d})")
+        shape = shape[:-2] + (pp, d // pp, shape[-1])
+        axes = axes[:-2] + ("stage", "data", "model")
     auto = (jax.sharding.AxisType.Auto,) * len(axes)
     return jax.make_mesh(shape, axes, axis_types=auto)
 
@@ -30,3 +43,20 @@ def make_dev_mesh(model: int = 1):
     if n % model:
         raise ValueError(f"{n} devices not divisible by model={model}")
     return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+def make_pipeline_mesh(pp: int, model: int = 1):
+    """Largest (stage, data, model) mesh on the local device pool.
+
+    ``stage`` is the pipeline axis consumed by ``repro.pipeline``'s
+    shard_map program; the leftover devices data-parallel the
+    microbatch rows. Pipeline + model parallelism is not composed yet
+    (make_pipeline_step enforces model == 1)."""
+    n = jax.device_count()
+    if pp < 1:
+        raise ValueError(f"pp must be >= 1, got {pp}")
+    if n % (pp * model):
+        raise ValueError(
+            f"{n} devices not divisible by pp={pp} * model={model}")
+    return jax.make_mesh((pp, n // (pp * model), model),
+                         ("stage", "data", "model"))

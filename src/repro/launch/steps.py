@@ -125,20 +125,19 @@ def stats_batch_shape(cfg: ModelConfig, shape: ShapeCfg,
 def _split_microbatches(batch, accum: int):
     """Reshape every batch leaf to a leading (accum, mb, ...) layout.
 
-    Batch dim is axis 0 except M-RoPE ``positions`` (3, B, T). The
-    microbatch dim keeps the (pod, data) sharding (hinted — the reshape
-    is local because accum divides the per-shard row count)."""
+    The split itself lives in ``repro.pipeline.microbatch`` (shared
+    with the pipeline executor, which feeds the same microbatches
+    through its schedule); this wrapper adds the layout hints: the
+    microbatch dim keeps the (pod, data) sharding (the reshape is
+    local because accum divides the per-shard row count)."""
+    from repro.pipeline.microbatch import split_microbatches
+
     out = {}
-    for k, v in batch.items():
-        if k == "positions" and v.ndim == 3:
-            b = v.shape[1]
-            r = v.reshape(3, accum, b // accum, *v.shape[2:]) \
-                .transpose(1, 0, 2, 3)
-            out[k] = shard_hint(r, None, None, BATCH_AXES)
+    for k, v in split_microbatches(batch, accum).items():
+        if k == "positions" and v.ndim >= 4:
+            out[k] = shard_hint(v, None, None, BATCH_AXES)
         else:
-            b = v.shape[0]
-            r = v.reshape(accum, b // accum, *v.shape[1:])
-            out[k] = shard_hint(r, None, BATCH_AXES)
+            out[k] = shard_hint(v, None, BATCH_AXES)
     return out
 
 
@@ -190,14 +189,82 @@ def make_train_step(cfg: ModelConfig, kcfg: KFACConfig,
 
             (grads, loss), _ = jax.lax.scan(
                 body, (zeros, jnp.zeros((), jnp.float32)), micro)
-        params2, kstate2 = kfac.apply_updates(
-            state.params, grads, state.kfac, specs, kcfg,
-            wu_plan=wu_plan)
-        gnorm = jnp.sqrt(sum(
-            jnp.sum(jnp.square(g.astype(jnp.float32)))
-            for g in jax.tree.leaves(grads)))
-        return (TrainState(params2, kstate2),
-                {"loss": loss, "grad_norm": gnorm})
+        return _wu_tail(state, loss, grads, specs, kcfg, wu_plan)
+
+    return train_step
+
+
+def _wu_tail(state: TrainState, loss, grads, specs, kcfg: KFACConfig,
+             wu_plan) -> Tuple[TrainState, dict]:
+    """The WU graph + metrics shared by the monolithic and pipelined
+    steps: K-FAC precondition + update on the accumulated gradients,
+    grad-norm metric — one definition, so both paths always report and
+    update identically."""
+    params2, kstate2 = kfac.apply_updates(
+        state.params, grads, state.kfac, specs, kcfg, wu_plan=wu_plan)
+    gnorm = jnp.sqrt(sum(
+        jnp.sum(jnp.square(g.astype(jnp.float32)))
+        for g in jax.tree.leaves(grads)))
+    return (TrainState(params2, kstate2),
+            {"loss": loss, "grad_norm": gnorm})
+
+
+def make_pipeline_step(cfg: ModelConfig, kcfg: KFACConfig, *,
+                       mesh=None, pp: int = 1, schedule="1f1b",
+                       n_micro: Optional[int] = None,
+                       wu_plan=None) -> Callable:
+    """Pipeline-parallel FP+BP+WU step over the ``stage`` mesh axis.
+
+    The layer stack is cut into ``pp`` contiguous stages
+    (``pipeline.partition_stages``), the batch into microbatches
+    (``n_micro``, default ``max(train_accum, pp)``), and the
+    ``schedule`` — "gpipe" | "1f1b", or an already-built
+    ``pipeline.Schedule`` (so callers that also need the schedule for
+    bubble accounting build it exactly once) — is lowered into one
+    shard_map program with ppermute transfers
+    (``pipeline.make_pipeline_grads_fn``). Loss/gradients keep the
+    gradient-accumulation semantics, and the WU tail (K-FAC
+    precondition + update, optionally pooled via ``wu_plan``) is the
+    same ``_wu_tail`` the monolithic step runs.
+
+    ``pp=1`` returns :func:`make_train_step` itself — the monolithic
+    program, bitwise-identical to today's path by construction.
+    """
+    if pp <= 1:
+        return make_train_step(cfg, kcfg, wu_plan=wu_plan)
+    from repro import pipeline
+
+    if mesh is None:
+        raise ValueError("pp > 1 needs a mesh with a 'stage' axis "
+                         "(launch.mesh.make_pipeline_mesh)")
+    part = pipeline.partition_stages(cfg, pp, require_uniform=True)
+    m = n_micro or max(cfg.train_accum, pp)
+    if isinstance(schedule, pipeline.Schedule):
+        sched = schedule
+        if (sched.n_stages, sched.n_micro) != (pp, m):
+            raise ValueError(
+                f"schedule was built for (S={sched.n_stages}, "
+                f"M={sched.n_micro}), step wants (S={pp}, M={m})")
+    else:
+        sched = pipeline.make_schedule(schedule, pp, m)
+    grads_fn = pipeline.make_pipeline_grads_fn(cfg, part, sched, mesh)
+    specs = kfac_specs(cfg)
+
+    data_shards = 1
+    for ax in ("pod", "data"):
+        data_shards *= dict(mesh.shape).get(ax, 1)
+
+    def train_step(state: TrainState, batch) -> Tuple[TrainState, dict]:
+        b = batch["tokens"].shape[0]
+        if b % (m * data_shards):
+            raise ValueError(
+                f"global batch {b} must divide into n_micro={m} "
+                f"microbatches x {data_shards} data shard(s); pick a "
+                f"batch that is a multiple of {m * data_shards}")
+        micro = pipeline.split_microbatches(batch, m)
+        loss, grads = grads_fn(state.params, micro)
+        grads = shard_like_params(grads)
+        return _wu_tail(state, loss, grads, specs, kcfg, wu_plan)
 
     return train_step
 

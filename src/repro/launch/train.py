@@ -71,6 +71,11 @@ class KFACProgram:
     update run as one batched VMM⊕INV program per (bi, bo) block pool
     instead of a per-leaf loop (bitwise identical; ``--no-fused-wu``
     keeps the legacy path for parity checks).
+    ``pp``/``pp_schedule``: pipeline-parallel FP/BP over the ``stage``
+    mesh axis (repro.pipeline; ``pp=1`` is the monolithic program).
+    With ``async_inv`` the SOI refresh is dispatched right before the
+    pipeline program so the INV work overlaps the fill/drain bubbles
+    (``pipeline.kfac_glue``).
     """
 
     cfg: Any
@@ -79,9 +84,12 @@ class KFACProgram:
     dist_inv: bool = False
     async_inv: bool = False
     fused_wu: bool = True
+    pp: int = 1
+    pp_schedule: str = "1f1b"
 
     def __post_init__(self):
         self._refresher = None
+        self._sched = None
 
     def _shardings(self, mesh, ab=None):
         ab = ab or steps_mod.abstract_train_state(self.cfg, self.kcfg)
@@ -108,8 +116,23 @@ class KFACProgram:
         wu_plan = steps_mod.make_wu_plan_for(
             self.cfg, self.kcfg, ndev=mesh_ndev(mesh),
             abstract_state=ab) if self.fused_wu else None
-        train = jax.jit(steps_mod.make_train_step(self.cfg, self.kcfg,
-                                                  wu_plan=wu_plan),
+        if self.pp > 1:
+            from repro.pipeline import make_schedule
+
+            n_micro = max(self.cfg.train_accum, self.pp)
+            self._sched = make_schedule(self.pp_schedule, self.pp,
+                                        n_micro)
+            # pass the built Schedule through so the executing program
+            # and the bubble metrics describe the same tick grid
+            train_fn = steps_mod.make_pipeline_step(
+                self.cfg, self.kcfg, mesh=mesh, pp=self.pp,
+                schedule=self._sched, n_micro=n_micro,
+                wu_plan=wu_plan)
+        else:
+            self._sched = None
+            train_fn = steps_mod.make_train_step(self.cfg, self.kcfg,
+                                                 wu_plan=wu_plan)
+        train = jax.jit(train_fn,
                         in_shardings=(st_shard, b_spec),
                         out_shardings=(st_shard, None),
                         donate_argnums=(0,))
@@ -149,6 +172,7 @@ class KFACProgram:
             self._refresher = None
         refresher = self._refresher
         kcfg = self.kcfg
+        sched = self._sched
 
         def subsample(batch):
             sb = min(batch["tokens"].shape[0], kcfg.stats_batch)
@@ -168,7 +192,16 @@ class KFACProgram:
                 state, m = stats(state, subsample(batch))
                 metrics.update(m)
             if i % kcfg.inv_every == 0:
-                if refresher is not None:
+                if refresher is not None and sched is not None:
+                    # pipelined: dispatch the refresh just before the
+                    # pipeline program so INV overlaps its bubbles
+                    from repro.pipeline import kfac_glue
+
+                    kstate, info = kfac_glue.bubble_refresh(
+                        refresher, state.kfac, sched)
+                    state = state._replace(kfac=kstate)
+                    metrics.update(info)
+                elif refresher is not None:
                     state = state._replace(
                         kfac=refresher.step(state.kfac))
                 else:
@@ -255,6 +288,15 @@ def main(argv=None):
     ap.add_argument("--inv-every", type=int, default=10)
     ap.add_argument("--block-size", type=int, default=128)
     ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--pp", type=int, default=1,
+                    help="pipeline-parallel stages: the layer stack is "
+                         "partitioned over a 'stage' mesh axis and "
+                         "microbatches stream through a static "
+                         "schedule (repro.pipeline); 1 = monolithic")
+    ap.add_argument("--pp-schedule", choices=("gpipe", "1f1b"),
+                    default="1f1b",
+                    help="microbatch schedule: gpipe (fill then "
+                         "drain) or 1f1b (same bubble, min stash)")
     ap.add_argument("--dist-inv", action=argparse.BooleanOptionalAction,
                     default=False,
                     help="block-parallel SOI inversion: each device "
@@ -288,8 +330,13 @@ def main(argv=None):
         program = KFACProgram(cfg, kcfg, seed=args.seed,
                               dist_inv=args.dist_inv,
                               async_inv=args.async_inv,
-                              fused_wu=args.fused_wu)
+                              fused_wu=args.fused_wu,
+                              pp=args.pp,
+                              pp_schedule=args.pp_schedule)
     else:
+        if args.pp > 1:
+            raise SystemExit("--pp > 1 is a KFACProgram feature; the "
+                             "SGD baseline runs monolithic")
         program = SGDProgram(cfg, lr=args.lr, seed=args.seed)
 
     ds = SyntheticTokens(vocab=cfg.vocab, seq_len=args.seq,
@@ -305,7 +352,8 @@ def main(argv=None):
     loop = TrainLoop(
         LoopConfig(total_steps=args.steps, ckpt_dir=args.ckpt_dir,
                    ckpt_every=args.ckpt_every,
-                   model_parallel=args.model_parallel),
+                   model_parallel=args.model_parallel,
+                   pipeline_parallel=args.pp),
         program, ds,
         inject=inject if args.inject_failure_at >= 0 else None)
     summary = loop.run()

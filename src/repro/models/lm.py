@@ -414,10 +414,11 @@ def forward(cfg, params, batch, taps=None, collect=False, cache=None,
     return logits, stats, new_cache
 
 
-def loss_fn(cfg, params, batch, taps=None, collect=False):
-    """Next-token cross-entropy. Returns (loss, stats)."""
-    logits, stats, _ = forward(cfg, params, batch, taps=taps,
-                               collect=collect, train=True)
+def loss_from_logits(cfg, logits, batch):
+    """Next-token cross-entropy from full-sequence logits — the tail of
+    :func:`loss_fn`, shared with the pipeline's last stage
+    (``repro.pipeline``) so both paths compute the identical loss."""
+    del cfg
     labels = batch["tokens"][:, 1:]
     lg = logits[:, :-1].astype(jnp.float32)
     logz = jax.scipy.special.logsumexp(lg, axis=-1)
@@ -426,10 +427,60 @@ def loss_fn(cfg, params, batch, taps=None, collect=False):
     nll = logz - gold
     if mask is not None:
         m = mask[:, 1:].astype(jnp.float32)
-        loss = jnp.sum(nll * m) / jnp.maximum(jnp.sum(m), 1.0)
-    else:
-        loss = jnp.mean(nll)
-    return loss, stats
+        return jnp.sum(nll * m) / jnp.maximum(jnp.sum(m), 1.0)
+    return jnp.mean(nll)
+
+
+def loss_fn(cfg, params, batch, taps=None, collect=False):
+    """Next-token cross-entropy. Returns (loss, stats)."""
+    logits, stats, _ = forward(cfg, params, batch, taps=taps,
+                               collect=collect, train=True)
+    return loss_from_logits(cfg, logits, batch), stats
+
+
+# ---------------------------------------------------------------------------
+# Per-stage slices (pipeline parallelism, repro.pipeline)
+# ---------------------------------------------------------------------------
+
+def embed_inputs(cfg, params, batch, positions):
+    """Stage-0 front of the pipelined forward: token embedding (+ VLM
+    image projection). Public alias of the internal embed so the
+    pipeline executor and :func:`forward` trace the same ops."""
+    return _embed(cfg, params, batch, positions)
+
+
+def stage_slice_forward(cfg, layer_stack, x, positions, *, train=True):
+    """Run a contiguous slice of the uniform scanned decoder stack —
+    the per-stage body of the pipeline executor.
+
+    ``layer_stack`` is the ``params["layers"]`` subtree restricted to
+    this stage's ``(K, ...)`` layers (the ``stage``-sharded slice).
+    Train-mode only: no KV caches, no stats taps (the SU graph runs as
+    its own amortized program), per-layer remat as in :func:`forward`.
+    """
+    if cfg.family in ("hybrid", "audio"):
+        raise NotImplementedError(
+            f"stage_slice_forward covers the uniform scanned families "
+            f"(dense/vlm/moe/ssm), not {cfg.family!r}")
+    kind = layer_plan(cfg)[0]
+
+    def body(xcur, p_l):
+        ctx = Ctx(taps=None, collect=False, soi_block=cfg.soi_block)
+        xnew, _ = _layer_apply(cfg, kind, p_l, xcur, positions, ctx,
+                               "layers", cache=None, idx=None)
+        return xnew, None
+
+    fn = jax.checkpoint(body) if (train and cfg.remat) else body
+    x, _ = jax.lax.scan(fn, x, layer_stack)
+    return x
+
+
+def head_loss(cfg, params, x, batch):
+    """Last-stage tail of the pipelined forward: final norm + vocab
+    head + :func:`loss_from_logits` — the identical math the monolithic
+    :func:`loss_fn` runs after its layer scan."""
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return loss_from_logits(cfg, _logits(cfg, params, x), batch)
 
 
 # ---------------------------------------------------------------------------

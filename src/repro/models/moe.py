@@ -139,6 +139,13 @@ def _moe_fast(cfg, p, xf, prefix):
 
 
 def _use_fast_path(cfg, ctx, prefix) -> bool:
+    from repro.dist.api import in_hint_guard
+
+    if in_hint_guard():
+        # already inside a manual (shard_map) region — the pipeline
+        # stage program — where a nested shard_map over mesh axes is
+        # illegal; the portable einsum path computes the same routing
+        return False
     if ctx is not None and ctx.collect:
         return False
     if ctx is not None and ctx.taps is not None and any(

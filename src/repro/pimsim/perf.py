@@ -249,6 +249,26 @@ class RePASTModel:
         return w + soi
 
 
+def pipeline_bubble_fraction(n_stages: int, n_micro: int) -> float:
+    """Analytic fill/drain bubble of a synchronous layer pipeline.
+
+    PipeLayer (the paper's substrate, Sec. II-C) streams consecutive
+    inputs through per-layer pipeline segments; with ``S`` segments and
+    ``M`` inputs in flight each segment idles for ``S - 1`` of the
+    ``M + S - 1`` slots of each phase — the classic
+
+        bubble = (S - 1) / (M + S - 1)
+
+    shared by the GPipe-fill and 1F1B schedules (1F1B's win is stash
+    memory, not bubble). ``benchmarks/pipeline_bench.py`` checks the
+    executable pipeline (``repro.pipeline``) against this prediction.
+    """
+    if n_stages < 1 or n_micro < 1:
+        raise ValueError(f"need n_stages>=1, n_micro>=1, got "
+                         f"({n_stages}, {n_micro})")
+    return (n_stages - 1) / (n_micro + n_stages - 1)
+
+
 def steps_per_epoch(name: str) -> float:
     return STEPS_PER_EPOCH.get(name, IMAGES_PER_EPOCH / BATCH)
 

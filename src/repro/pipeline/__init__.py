@@ -1,0 +1,47 @@
+"""Inter-layer pipeline parallelism for second-order training.
+
+RePAST trains on a PipeLayer-style substrate: consecutive batches
+stream through per-layer crossbar pipelines while the INV engine runs
+second-order work beside them (paper Sec. II-C, VI). This package is
+the mesh image of that execution model — a ``stage`` axis over which
+the layer stack is partitioned, with microbatches flowing through a
+static schedule:
+
+  stages      host-side balanced contiguous partition of the block
+              stack (cost-model DP; embedding/head pinned to the
+              first/last stage)
+  schedule    GPipe and 1F1B tick grids built host-side, lowered into
+              ONE shard_map program (lax.scan over ticks, 3-way switch
+              per tick, ppermute activation/cotangent transfers,
+              remat-style backward from stashed stage inputs)
+  microbatch  the (n_micro, mb, ...) batch splitter, shared with
+              gradient accumulation (launch/steps)
+  stash       static slot allocation for the activation stashes +
+              weight-version ledger enforcing PipeLayer's exactly-once
+              update semantics
+  kfac_glue   stage-local K-FAC factor map + the policy that schedules
+              the async SOI inverse refresh into fill/drain bubbles
+
+Entry point: ``launch/steps.make_pipeline_step`` (``--pp N`` /
+``--pp-schedule`` on the training CLI); ``pp=1`` returns the exact
+monolithic ``make_train_step`` program.
+"""
+
+from repro.pipeline.microbatch import split_microbatches  # noqa: F401
+from repro.pipeline.schedule import (  # noqa: F401
+    SCHEDULES,
+    Schedule,
+    make_pipeline_grads_fn,
+    make_schedule,
+)
+from repro.pipeline.stages import (  # noqa: F401
+    StagePartition,
+    partition_stages,
+)
+from repro.pipeline.stash import (  # noqa: F401
+    ExactlyOnceViolation,
+    SlotAllocator,
+    StashPlan,
+    WeightStash,
+)
+from repro.pipeline import kfac_glue  # noqa: F401

@@ -1,0 +1,504 @@
+"""Static pipeline schedules (GPipe / 1F1B) + the shard_map lowering.
+
+The whole schedule is decided host-side, before tracing: a tick grid
+``(n_ticks, n_stages)`` where every cell is IDLE, a FWD of one
+microbatch, or a BWD of one microbatch, plus *static* slot indices for
+every buffer access (activation stash, forward-receive ring, grad-
+receive ring).  The executor then lowers the grid into ONE jitted
+``shard_map`` program over the ``stage`` mesh axis:
+
+* one ``lax.scan`` over ticks; each tick a 3-way ``lax.switch``
+  (idle / forward / backward) — real per-device control flow, so a
+  bubble tick costs (nearly) nothing and a stage only runs the unit
+  the schedule assigned it;
+* activations move to the next stage and cotangents to the previous
+  one with one ``lax.ppermute`` pair per tick;
+* backward is remat-style: the FWD unit stashes only the *stage input*
+  (``stash.SlotAllocator`` assigns the slot), and the BWD unit re-runs
+  the stage forward under ``jax.vjp`` from that input — so stash memory
+  is exactly one activation tensor per in-flight microbatch, the bound
+  :class:`repro.pipeline.stash.StashPlan` documents;
+* the loss and the shared (embedding/head) gradients leave the region
+  ``psum``-ed over ``stage``; per-stage layer gradients stay sharded.
+
+Schedule shapes (both synchronous — the weight update applies after the
+drain, which is what keeps a pipelined step numerically a gradient-
+accumulation step):
+
+  gpipe   fill all M forwards, then drain all M backwards;
+          peak stash M at stage 0.
+  1f1b    warmup ``min(S-1-s, M)`` forwards per stage, then steady
+          one-forward-one-backward, then drain; same 2(M+S-1) ticks and
+          the same (S-1)/(M+S-1) bubble fraction as GPipe but peak
+          stash only ``min(M, S-s)``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.dist.api import STAGE, path_key
+from repro.pipeline.stages import StagePartition
+from repro.pipeline.stash import SlotAllocator, StashPlan, WeightStash
+
+IDLE, FWD, BWD = 0, 1, 2
+
+SCHEDULES = ("gpipe", "1f1b")
+
+
+# ---------------------------------------------------------------------------
+# Schedule construction (host-side, static)
+# ---------------------------------------------------------------------------
+
+def _stage_sequences(kind: str, S: int, M: int):
+    """Per-stage ordered op lists [(op, mb), ...]."""
+    seqs = []
+    for s in range(S):
+        if kind == "gpipe":
+            seq = [(FWD, m) for m in range(M)] + \
+                  [(BWD, m) for m in range(M)]
+        elif kind == "1f1b":
+            w = min(S - 1 - s, M)
+            seq = [(FWD, m) for m in range(w)]
+            for i in range(M - w):
+                seq.append((FWD, w + i))
+                seq.append((BWD, i))
+            seq += [(BWD, m) for m in range(M - w, M)]
+        else:
+            raise ValueError(
+                f"unknown schedule {kind!r}; pick one of {SCHEDULES}")
+        seqs.append(seq)
+    return seqs
+
+
+@dataclasses.dataclass(frozen=True)
+class Schedule:
+    """Static tick grid + buffer slot maps for one (kind, S, M).
+
+    All arrays are ``(n_ticks, n_stages)`` int32; -1 marks
+    not-applicable.  ``op``/``mb`` say what each stage does at each
+    tick.  Slot maps (indices into per-stage ring buffers):
+
+      ``stash_wr``  FWD writes its stage input here,
+      ``stash_rd``  BWD reads it back,
+      ``recv_st``   where the activation arriving from stage-1's tick
+                    lands (receiver side),
+      ``recv_rd``   FWD's input slot (stages > 0),
+      ``grad_st``   where the cotangent arriving from stage+1 lands,
+      ``grad_rd``   BWD's incoming-cotangent slot (stages < S-1).
+    """
+
+    kind: str
+    n_stages: int
+    n_micro: int
+    op: np.ndarray
+    mb: np.ndarray
+    stash_wr: np.ndarray
+    stash_rd: np.ndarray
+    recv_st: np.ndarray
+    recv_rd: np.ndarray
+    grad_st: np.ndarray
+    grad_rd: np.ndarray
+    stash_plan: StashPlan
+
+    @property
+    def n_ticks(self) -> int:
+        return int(self.op.shape[0])
+
+    def idle_ticks(self, s: int) -> int:
+        return int((self.op[:, s] == IDLE).sum())
+
+    @property
+    def bubble_fraction(self) -> float:
+        """Idle share of the tick grid — equals the classic
+        (S-1)/(M+S-1) fill/drain bubble for both schedules."""
+        return float((self.op == IDLE).sum()) / self.op.size
+
+    def peak_stash(self, s: int) -> int:
+        return self.stash_plan.act_depth[s]
+
+    def summary(self) -> dict:
+        return {
+            "kind": self.kind,
+            "n_stages": self.n_stages,
+            "n_micro": self.n_micro,
+            "n_ticks": self.n_ticks,
+            "bubble_fraction": round(self.bubble_fraction, 4),
+            "peak_stash": list(self.stash_plan.act_depth),
+        }
+
+    # -- invariants --------------------------------------------------------
+
+    def check(self) -> None:
+        """Dependency + exactly-once structural validation."""
+        S, M = self.n_stages, self.n_micro
+        tick_f = np.full((M, S), -1)
+        tick_b = np.full((M, S), -1)
+        for t in range(self.n_ticks):
+            for s in range(S):
+                o, m = int(self.op[t, s]), int(self.mb[t, s])
+                if o == FWD:
+                    assert tick_f[m, s] < 0, f"F({m},{s}) twice"
+                    tick_f[m, s] = t
+                elif o == BWD:
+                    assert tick_b[m, s] < 0, f"B({m},{s}) twice"
+                    tick_b[m, s] = t
+        assert (tick_f >= 0).all() and (tick_b >= 0).all(), \
+            "some microbatch never ran"
+        for m in range(M):
+            for s in range(S):
+                if s > 0:
+                    assert tick_f[m, s] > tick_f[m, s - 1], \
+                        f"F({m},{s}) before its input exists"
+                    assert tick_b[m, s] < tick_b[m, s - 1], \
+                        f"B({m},{s - 1}) before its cotangent exists"
+                assert tick_b[m, s] > tick_f[m, s], \
+                    f"B({m},{s}) before F({m},{s})"
+
+    def verify_exactly_once(self) -> None:
+        """Drive a :class:`WeightStash` per stage over the grid: every
+        microbatch's backward sees the weights its forward saw, and the
+        end-of-step update finds the pipe drained (PipeLayer's
+        exactly-once contract).  Raises ``ExactlyOnceViolation``."""
+        stashes = [WeightStash(depth=1) for _ in range(self.n_stages)]
+        for t in range(self.n_ticks):
+            for s in range(self.n_stages):
+                o, m = int(self.op[t, s]), int(self.mb[t, s])
+                if o == FWD:
+                    stashes[s].forward(m)
+                elif o == BWD:
+                    stashes[s].backward(m)
+        for st in stashes:
+            st.commit_update()
+
+
+def make_schedule(kind: str, n_stages: int, n_micro: int) -> Schedule:
+    """Build + validate the static schedule for (kind, S, M)."""
+    S, M = n_stages, n_micro
+    if S < 1 or M < 1:
+        raise ValueError(f"need n_stages>=1 and n_micro>=1, got "
+                         f"({S}, {M})")
+    seqs = _stage_sequences(kind, S, M)
+
+    # -- greedy tick simulation -------------------------------------------
+    ptr = [0] * S
+    tick_f: Dict[Tuple[int, int], int] = {}
+    tick_b: Dict[Tuple[int, int], int] = {}
+    grid: list = []
+    t = 0
+    limit = 4 * (M + S) + 8
+    while any(ptr[s] < len(seqs[s]) for s in range(S)):
+        if t >= limit:                      # pragma: no cover - safety
+            raise RuntimeError(f"schedule {kind} did not converge")
+        row = []
+        for s in range(S):
+            cell = (IDLE, -1)
+            if ptr[s] < len(seqs[s]):
+                o, m = seqs[s][ptr[s]]
+                if o == FWD:
+                    ready = s == 0 or tick_f.get((m, s - 1), t) < t
+                else:
+                    ready = (tick_f.get((m, s), t) < t and
+                             (s == S - 1 or tick_b.get((m, s + 1), t) < t))
+                if ready:
+                    cell = (o, m)
+            row.append(cell)
+        for s, (o, m) in enumerate(row):    # commit after the full scan
+            if o == FWD:
+                tick_f[(m, s)] = t
+                ptr[s] += 1
+            elif o == BWD:
+                tick_b[(m, s)] = t
+                ptr[s] += 1
+        grid.append(row)
+        t += 1
+
+    T = len(grid)
+    op = np.full((T, S), IDLE, np.int32)
+    mb = np.full((T, S), -1, np.int32)
+    for t in range(T):
+        for s in range(S):
+            op[t, s], mb[t, s] = grid[t][s]
+
+    # -- static buffer slots ----------------------------------------------
+    stash_wr = np.full((T, S), -1, np.int32)
+    stash_rd = np.full((T, S), -1, np.int32)
+    recv_st = np.full((T, S), -1, np.int32)
+    recv_rd = np.full((T, S), -1, np.int32)
+    grad_st = np.full((T, S), -1, np.int32)
+    grad_rd = np.full((T, S), -1, np.int32)
+    act_al = [SlotAllocator() for _ in range(S)]
+    recv_al = [SlotAllocator() for _ in range(S)]
+    grad_al = [SlotAllocator() for _ in range(S)]
+    act_slot: Dict[Tuple[int, int], int] = {}
+    recv_slot: Dict[Tuple[int, int], int] = {}
+    grad_slot: Dict[Tuple[int, int], int] = {}
+    for t in range(T):
+        # 1) consumptions this tick free their slots (reads happen
+        #    during compute, before the end-of-tick transfers land)
+        for s in range(S):
+            o, m = int(op[t, s]), int(mb[t, s])
+            if o == FWD:
+                stash_wr[t, s] = act_slot[(m, s)] = act_al[s].alloc()
+                if s > 0:
+                    slot = recv_slot.pop((m, s))
+                    recv_rd[t, s] = slot
+                    recv_al[s].free(slot)
+            elif o == BWD:
+                slot = act_slot.pop((m, s))
+                stash_rd[t, s] = slot
+                act_al[s].free(slot)
+                if s < S - 1:
+                    slot = grad_slot.pop((m, s))
+                    grad_rd[t, s] = slot
+                    grad_al[s].free(slot)
+        # 2) arrivals at the end of this tick allocate receiver slots
+        for s in range(S):
+            o, m = int(op[t, s]), int(mb[t, s])
+            if o == FWD and s < S - 1:
+                recv_st[t, s + 1] = recv_slot[(m, s + 1)] = \
+                    recv_al[s + 1].alloc()
+            elif o == BWD and s > 0:
+                grad_st[t, s - 1] = grad_slot[(m, s - 1)] = \
+                    grad_al[s - 1].alloc()
+
+    plan = StashPlan(
+        act_depth=tuple(a.peak for a in act_al),
+        recv_depth=tuple(a.peak for a in recv_al),
+        grad_depth=tuple(a.peak for a in grad_al),
+    )
+    sched = Schedule(kind=kind, n_stages=S, n_micro=M, op=op, mb=mb,
+                     stash_wr=stash_wr, stash_rd=stash_rd,
+                     recv_st=recv_st, recv_rd=recv_rd,
+                     grad_st=grad_st, grad_rd=grad_rd, stash_plan=plan)
+    sched.check()
+    sched.verify_exactly_once()
+    return sched
+
+
+# ---------------------------------------------------------------------------
+# shard_map lowering
+# ---------------------------------------------------------------------------
+
+def _is_stage_sharded(path: str) -> bool:
+    """Leaves whose leading dim is the scanned layer stack — sharded
+    over the ``stage`` axis (the per-stage parameter slice)."""
+    return path.startswith("layers/")
+
+
+def _param_specs(params) -> dict:
+    def one(path, leaf):
+        del leaf
+        return P(STAGE) if _is_stage_sharded(path_key(path)) else P()
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def _micro_specs(micro, batch_axes) -> dict:
+    bt = (batch_axes if len(batch_axes) > 1 else
+          (batch_axes[0] if batch_axes else None))
+    out = {}
+    for k, v in micro.items():
+        spec = [None] * v.ndim
+        if bt is not None:
+            # post-split layouts: (M, mb, ...) or (M, planes, mb, T)
+            spec[2 if (k == "positions" and v.ndim >= 4) else 1] = bt
+        out[k] = P(*spec)
+    return out
+
+
+def make_pipeline_grads_fn(cfg, part: StagePartition, sched: Schedule,
+                           mesh):
+    """Lower ``sched`` into one shard_map program.
+
+    Returns ``fn(params, micro) -> (loss, grads)`` where ``micro`` is
+    the :func:`repro.pipeline.microbatch.split_microbatches` layout and
+    ``(loss, grads)`` match the gradient-accumulation semantics of
+    ``launch/steps.make_train_step``: mean-of-microbatch losses, and
+    gradients averaged 1/M per microbatch in microbatch order.
+    """
+    from repro.dist.api import hint_guard
+    from repro.models import lm
+
+    S, M = sched.n_stages, sched.n_micro
+    if part.n_stages != S:
+        raise ValueError(f"partition has {part.n_stages} stages, "
+                         f"schedule has {S}")
+    if not part.uniform:
+        raise ValueError(
+            f"SPMD executor needs equal layers per stage, got "
+            f"{part.layer_counts()}")
+    sizes = dict(mesh.shape)
+    if sizes.get(STAGE) != S:
+        raise ValueError(
+            f"mesh axis 'stage' is {sizes.get(STAGE)}, schedule wants "
+            f"{S}; build the mesh with launch.mesh.make_pipeline_mesh")
+    if sizes.get("model", 1) != 1:
+        raise NotImplementedError(
+            "pipeline + model parallelism is not composed yet (the "
+            "stage program would need model-axis specs per weight); "
+            "run with model=1 on the pipeline mesh")
+    batch_axes = tuple(a for a in ("pod", "data") if a in sizes)
+    act_dtype = jnp.dtype(cfg.dtype)
+    D = cfg.d_model
+    inv_m = 1.0 / M
+
+    # static schedule arrays -> device constants, one row per tick
+    xs = {k: jnp.asarray(getattr(sched, k)) for k in
+          ("op", "mb", "stash_wr", "stash_rd", "recv_st", "recv_rd",
+           "grad_st", "grad_rd")}
+    fwd_perm = [(i, i + 1) for i in range(S - 1)]
+    bwd_perm = [(i + 1, i) for i in range(S - 1)]
+    acap = sched.stash_plan.act_cap
+    rcap = sched.stash_plan.recv_cap + 1      # +1: scratch slot for -1
+    gcap = sched.stash_plan.grad_cap + 1
+
+    def body(params, micro):
+        sid = jax.lax.axis_index(STAGE)
+        is_first = sid == 0
+        is_last = sid == S - 1
+        mb_local, T = micro["tokens"].shape[1:3]
+        zeros_act = jnp.zeros((mb_local, T, D), act_dtype)
+
+        def take_micro(i):
+            return jax.tree.map(
+                lambda v: jax.lax.dynamic_index_in_dim(
+                    v, i, 0, keepdims=False), micro)
+
+        def stage_forward(p, x_in, mbd):
+            if "positions" in mbd:
+                pos = mbd["positions"]
+            else:
+                b, t = mbd["tokens"].shape
+                pos = jnp.broadcast_to(
+                    jnp.arange(t, dtype=jnp.int32)[None], (b, t))
+            # only stage 0 runs the embedding (and, in the backward,
+            # its scatter-add into the vocab table) — like the head,
+            # a real branch, not a masked always-on compute
+            x0 = jax.lax.cond(
+                is_first,
+                lambda ops: lm.embed_inputs(
+                    cfg, p, ops[0], pos).astype(act_dtype),
+                lambda ops: ops[1].astype(act_dtype),
+                (mbd, x_in))
+            y = lm.stage_slice_forward(cfg, p["layers"], x0, pos,
+                                       train=True)
+            return y
+
+        def objective(p, x_in, dy, mbd):
+            """Scalar whose (p, x_in)-gradient is this stage's BWD:
+            loss/M on the last stage, <y, dy> (i.e. vjp with cotangent
+            dy) elsewhere."""
+            y = stage_forward(p, x_in, mbd)
+            loss_mb = jax.lax.cond(
+                is_last,
+                lambda yy: lm.head_loss(cfg, p, yy, mbd),
+                lambda yy: jnp.zeros((), jnp.float32),
+                y)
+            carry = jnp.sum(y.astype(jnp.float32)
+                            * dy.astype(jnp.float32))
+            obj = loss_mb * inv_m + jnp.where(is_last, 0.0, carry)
+            return obj, loss_mb
+
+        grad_obj = jax.value_and_grad(objective, argnums=(0, 1),
+                                      has_aux=True)
+
+        def ring_get(ring, slot):
+            return jax.lax.dynamic_index_in_dim(
+                ring, jnp.maximum(slot, 0), 0, keepdims=False)
+
+        def ring_set(ring, val, slot):
+            # slot -1 (nothing arriving) lands in the trailing scratch
+            idx = jnp.where(slot >= 0, slot, ring.shape[0] - 1)
+            return jax.lax.dynamic_update_index_in_dim(
+                ring, val.astype(ring.dtype), idx, 0)
+
+        def tick(carry, row):
+            stash, recv, dg, g_acc, loss_acc = carry
+            op = row["op"][sid]
+            m = row["mb"][sid]
+
+            def idle_fn(ops):
+                stash, g_acc, loss_acc = ops
+                return stash, g_acc, loss_acc, zeros_act, zeros_act
+
+            def fwd_fn(ops):
+                stash, g_acc, loss_acc = ops
+                mbd = take_micro(m)
+                x_in = ring_get(recv, row["recv_rd"][sid])
+                y = stage_forward(params, x_in, mbd)
+                stash = jax.lax.dynamic_update_index_in_dim(
+                    stash, x_in, row["stash_wr"][sid], 0)
+                return stash, g_acc, loss_acc, y.astype(act_dtype), \
+                    zeros_act
+
+            def bwd_fn(ops):
+                stash, g_acc, loss_acc = ops
+                mbd = take_micro(m)
+                x_in = ring_get(stash, row["stash_rd"][sid])
+                dy = ring_get(dg, row["grad_rd"][sid])
+                (_, loss_mb), (dp, dx) = grad_obj(params, x_in, dy,
+                                                  mbd)
+                g_acc = jax.tree.map(
+                    lambda a, g: a + g.astype(a.dtype), g_acc, dp)
+                loss_acc = loss_acc + loss_mb * inv_m
+                return stash, g_acc, loss_acc, zeros_act, \
+                    dx.astype(act_dtype)
+
+            stash, g_acc, loss_acc, y_send, dx_send = jax.lax.switch(
+                op, (idle_fn, fwd_fn, bwd_fn),
+                (stash, g_acc, loss_acc))
+            if S > 1:
+                y_recv = jax.lax.ppermute(y_send, STAGE, fwd_perm)
+                dx_recv = jax.lax.ppermute(dx_send, STAGE, bwd_perm)
+            else:                       # degenerate single stage
+                y_recv, dx_recv = y_send, dx_send
+            recv = ring_set(recv, y_recv, row["recv_st"][sid])
+            dg = ring_set(dg, dx_recv, row["grad_st"][sid])
+            return (stash, recv, dg, g_acc, loss_acc), None
+
+        init = (
+            jnp.zeros((acap, mb_local, T, D), act_dtype),
+            jnp.zeros((rcap, mb_local, T, D), act_dtype),
+            jnp.zeros((gcap, mb_local, T, D), act_dtype),
+            jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                         params),
+            jnp.zeros((), jnp.float32),
+        )
+        (_, _, _, g_acc, loss_acc), _ = jax.lax.scan(tick, init, xs)
+
+        loss = jax.lax.psum(loss_acc, STAGE)
+
+        def reduce_grad(path, g):
+            if not _is_stage_sharded(path_key(path)):
+                g = jax.lax.psum(g, STAGE)
+            if batch_axes:
+                g = jax.lax.pmean(g, batch_axes)
+            return g
+
+        grads = jax.tree_util.tree_map_with_path(reduce_grad, g_acc)
+        if batch_axes:
+            loss = jax.lax.pmean(loss, batch_axes)
+        return loss, grads
+
+    def pipeline_grads(params, micro):
+        mapped = jax.shard_map(
+            body, mesh=mesh,
+            in_specs=(_param_specs(params), _micro_specs(micro,
+                                                         batch_axes)),
+            out_specs=(P(), _param_specs(params)),
+            check_vma=False)
+        # model/dist shard_hints are illegal inside the manual region;
+        # the stage program IS the layout, so hints no-op under the
+        # guard (tracing happens synchronously within this call)
+        with hint_guard():
+            return mapped(params, micro)
+
+    return pipeline_grads

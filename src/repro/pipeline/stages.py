@@ -1,0 +1,198 @@
+"""Host-side stage partitioner: layer stack -> pipeline stages.
+
+The paper's substrate (PipeLayer, Sec. II-C) maps each layer's
+crossbar groups to pipeline segments so FP/BP of consecutive batches
+overlap across layers.  Here the "segment" is a ``stage`` mesh slice:
+the transformer block stack is cut into contiguous stages balanced by
+a per-layer FLOP cost model (the same cost-driven assignment idiom as
+``solve/partition.make_plan``'s greedy-LPT — pipeline stages must stay
+*contiguous*, so the balancing is a min-max boundary DP rather than
+free LPT placement), with the embedding pinned to the first stage and
+the vocab head pinned to the last.
+
+Everything is computed from the config's abstract shapes — no
+allocation, no tracing — and the resulting :class:`StagePartition` is
+purely static: the SPMD executor (``pipeline/schedule.py``) bakes the
+layer ranges into the lowered program.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+def layer_flops(cfg: ModelConfig, kind: str) -> float:
+    """Per-token forward matmul FLOPs of one decoder layer of ``kind``
+    (the relative weight the balancer needs; constants cancel)."""
+    d, f = cfg.d_model, cfg.d_ff
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    attn = 2.0 * (d * h * hd + 2 * d * kv * hd + h * hd * d)
+    mlp = 2.0 * 3 * d * f
+    if kind in ("attn", "local"):
+        return attn + mlp
+    if kind == "moe":
+        return attn + 2.0 * cfg.top_k * 3 * d * f + 2.0 * d * cfg.n_experts
+    if kind == "mamba":
+        di, n, dr = cfg.d_inner, cfg.ssm_state, cfg.dt_rank_
+        return 2.0 * (d * 2 * di + di * (dr + 2 * n) + dr * di + di * d)
+    if kind == "rec":
+        lw = cfg.lru_width_
+        return 2.0 * (2 * d * lw + 2 * lw * lw + lw * d) + mlp
+    raise ValueError(kind)
+
+
+def embed_flops(cfg: ModelConfig) -> float:
+    """Embedding-side cost pinned to stage 0 (gather ~ free; the VLM
+    image projection is the only real matmul)."""
+    if cfg.family == "vlm" and cfg.vision_dim:
+        return 2.0 * cfg.vision_dim * cfg.d_model
+    return 0.0
+
+
+def head_flops(cfg: ModelConfig) -> float:
+    """Vocab projection cost pinned to the last stage."""
+    return 2.0 * cfg.d_model * cfg.vocab
+
+
+@dataclasses.dataclass(frozen=True)
+class StagePartition:
+    """Contiguous layer ranges per stage, with per-stage balanced cost.
+
+    ``boundaries``: length ``n_stages + 1``; stage ``s`` owns layers
+    ``[boundaries[s], boundaries[s+1])``.  ``costs`` includes the
+    embed/head pins on the first/last stage.
+    """
+
+    n_stages: int
+    boundaries: Tuple[int, ...]
+    costs: Tuple[float, ...]
+
+    @property
+    def n_layers(self) -> int:
+        return self.boundaries[-1]
+
+    def layers_of(self, s: int) -> range:
+        return range(self.boundaries[s], self.boundaries[s + 1])
+
+    def layer_counts(self) -> Tuple[int, ...]:
+        return tuple(self.boundaries[s + 1] - self.boundaries[s]
+                     for s in range(self.n_stages))
+
+    @property
+    def uniform(self) -> bool:
+        """Equal layer counts per stage — required by the SPMD executor
+        (all devices run the same stage program on their slice)."""
+        return len(set(self.layer_counts())) == 1
+
+    @property
+    def imbalance(self) -> float:
+        """max/mean stage cost — 1.0 is perfectly balanced."""
+        return max(self.costs) / (sum(self.costs) / len(self.costs))
+
+    def summary(self) -> dict:
+        return {
+            "n_stages": self.n_stages,
+            "boundaries": list(self.boundaries),
+            "layer_counts": list(self.layer_counts()),
+            "stage_gflops_per_token": [round(c / 1e9, 4)
+                                       for c in self.costs],
+            "imbalance": round(self.imbalance, 4),
+        }
+
+
+def _min_max_boundaries(costs: np.ndarray, n_stages: int,
+                        first_extra: float, last_extra: float
+                        ) -> Tuple[int, ...]:
+    """Min-max contiguous partition (DP over boundary positions).
+
+    ``dp[k][i]`` = best achievable max-stage-cost splitting layers
+    ``[0, i)`` into ``k`` stages; the first/last stage carry the pinned
+    embed/head extras.  L and S are small (<= a few hundred / <= 64),
+    so the O(S * L^2) DP is instant at build time.
+    """
+    L = len(costs)
+    prefix = np.concatenate([[0.0], np.cumsum(costs)])
+
+    def seg(i, j, k):                     # cost of layers [i, j) as stage k
+        c = prefix[j] - prefix[i]
+        if k == 0:
+            c += first_extra
+        if k == n_stages - 1:
+            c += last_extra
+        return c
+
+    INF = float("inf")
+    dp = np.full((n_stages + 1, L + 1), INF)
+    cut = np.zeros((n_stages + 1, L + 1), np.int64)
+    dp[0][0] = 0.0
+    for k in range(1, n_stages + 1):
+        for i in range(k, L - (n_stages - k) + 1):
+            for j in range(k - 1, i):
+                c = max(dp[k - 1][j], seg(j, i, k - 1))
+                if c < dp[k][i]:
+                    dp[k][i] = c
+                    cut[k][i] = j
+    bounds = [L]
+    i = L
+    for k in range(n_stages, 0, -1):
+        i = int(cut[k][i])
+        bounds.append(i)
+    return tuple(reversed(bounds))
+
+
+def partition_stages(cfg: ModelConfig, n_stages: int,
+                     *, require_uniform: bool = False) -> StagePartition:
+    """Balanced contiguous stage partition of ``cfg``'s layer stack.
+
+    Built from abstract shapes only.  ``require_uniform`` restricts the
+    cut points to equal layer counts per stage (the SPMD executor's
+    constraint: every device runs the same stage program on its slice)
+    and raises a clear error when ``n_layers % n_stages != 0``; the
+    free min-max DP otherwise places boundaries wherever the cost model
+    says (e.g. one layer fewer on the head-pinned last stage).
+    """
+    from repro.models.lm import layer_plan        # deferred: no cycle
+
+    if cfg.family == "audio":
+        raise NotImplementedError(
+            "pipeline parallelism covers the uniform scanned decoder "
+            "families (dense/vlm/moe/ssm); the whisper enc-dec stack "
+            "is out of scope (ROADMAP open item)")
+    if n_stages < 1:
+        raise ValueError(f"n_stages must be >= 1, got {n_stages}")
+    kinds = layer_plan(cfg)
+    if cfg.family == "hybrid":
+        raise NotImplementedError(
+            "pipeline parallelism covers the uniform scanned decoder "
+            "families; the hybrid pattern-unit stack is out of scope "
+            "(ROADMAP open item)")
+    if n_stages > cfg.n_layers:
+        raise ValueError(
+            f"{n_stages} stages > {cfg.n_layers} layers ({cfg.name})")
+    costs = np.array([layer_flops(cfg, k) for k in kinds], np.float64)
+    if require_uniform:
+        if cfg.n_layers % n_stages:
+            raise ValueError(
+                f"SPMD pipeline needs equal layers per stage: "
+                f"{cfg.name} has {cfg.n_layers} layers, not divisible "
+                f"by {n_stages} stages")
+        per = cfg.n_layers // n_stages
+        bounds = tuple(per * s for s in range(n_stages + 1))
+    else:
+        bounds = _min_max_boundaries(costs, n_stages, embed_flops(cfg),
+                                     head_flops(cfg))
+    stage_costs = []
+    for s in range(n_stages):
+        c = float(costs[bounds[s]:bounds[s + 1]].sum())
+        if s == 0:
+            c += embed_flops(cfg)
+        if s == n_stages - 1:
+            c += head_flops(cfg)
+        stage_costs.append(c)
+    return StagePartition(n_stages=n_stages, boundaries=bounds,
+                          costs=tuple(stage_costs))

@@ -42,23 +42,32 @@ def largest_mesh(
     n_devices: int,
     model: int,
     *,
+    pp: int = 1,
     axis_names: Sequence[str] = ("data", "model"),
 ) -> tuple:
-    """Largest (data, model) shape with data a power of two."""
-    if n_devices < model:
-        raise DeviceLoss(0, f"cannot keep model={model} with "
-                            f"{n_devices} devices")
-    data = _pow2_floor(n_devices // model)
+    """Largest (data, model) — or, with ``pp > 1``,
+    (stage, data, model) — shape with data a power of two. Like the
+    ``model`` axis, the ``stage`` degree is preserved across re-meshes
+    (the stage partition is baked into layouts and the pipeline
+    schedule); only ``data`` shrinks on device loss."""
+    if n_devices < model * pp:
+        raise DeviceLoss(0, f"cannot keep model={model} x pp={pp} "
+                            f"with {n_devices} devices")
+    data = _pow2_floor(n_devices // (model * pp))
+    if pp > 1:
+        return (pp, data, model)
     return (data, model)
 
 
 def elastic_mesh(
     model: int = 1,
     *,
+    pp: int = 1,
     devices: Optional[Sequence] = None,
     exclude: int = 0,
 ) -> Mesh:
-    """Build the largest healthy (data, model) mesh.
+    """Build the largest healthy (data, model) mesh — with ``pp > 1``,
+    a (stage, data, model) pipeline mesh (repro.pipeline).
 
     ``exclude`` drops that many devices from the tail of the pool —
     the test/drill hook for simulating a lost host.
@@ -68,8 +77,11 @@ def elastic_mesh(
         devs = devs[: len(devs) - exclude]
     if not devs:
         raise DeviceLoss(exclude, "no devices left")
-    shape = largest_mesh(len(devs), model)
-    n = shape[0] * shape[1]
+    shape = largest_mesh(len(devs), model, pp=pp)
+    import math
+
     import numpy as np
+    n = math.prod(shape)
     arr = np.array(devs[:n]).reshape(shape)
-    return Mesh(arr, ("data", "model"))
+    names = ("stage", "data", "model") if pp > 1 else ("data", "model")
+    return Mesh(arr, names)

@@ -57,6 +57,10 @@ class LoopConfig:
     keep: int = 3
     max_failures: int = 3
     model_parallel: int = 1
+    # pipeline (stage) degree: > 1 re-meshes onto (stage, data, model)
+    # and is preserved across elastic recoveries like model_parallel
+    # (the stage partition is baked into layouts and schedules)
+    pipeline_parallel: int = 1
     log_every: int = 10
     straggler_factor: float = 2.0
     hard_deadline_s: Optional[float] = None
@@ -81,6 +85,7 @@ class TrainLoop:
         self.dataset = dataset
         self.mesh_fn = mesh_fn or (
             lambda exclude=0: elastic_mesh(cfg.model_parallel,
+                                           pp=cfg.pipeline_parallel,
                                            exclude=exclude))
         self.inject = inject
         self.ckpt = CheckpointManager(cfg.ckpt_dir, keep=cfg.keep)

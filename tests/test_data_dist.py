@@ -110,16 +110,27 @@ def test_compression_wire_bytes():
 # ---------------------------------------------------------------------------
 
 def test_param_specs_row_col():
+    """Scanned-stack weights carry the pipeline ``stage`` axis on the
+    layer dim (dropped by clean_spec on stage-less meshes); the 2D
+    row/col layout is unchanged."""
     from repro.dist.sharding import _param_pspec
 
-    assert _param_pspec("layers/attn/wq", 3) == (None, "data", "model")
-    assert _param_pspec("layers/attn/wo", 3) == (None, "model", "data")
-    assert _param_pspec("layers/mlp/wd", 3) == (None, "model", "data")
-    assert _param_pspec("layers/moe/wg", 4) == (None, "model", "data",
-                                                None)
+    assert _param_pspec("layers/attn/wq", 3) == ("stage", "data",
+                                                 "model")
+    assert _param_pspec("layers/attn/wo", 3) == ("stage", "model",
+                                                 "data")
+    assert _param_pspec("layers/mlp/wd", 3) == ("stage", "model",
+                                                "data")
+    assert _param_pspec("layers/moe/wg", 4) == ("stage", "model",
+                                                "data", None)
+    assert _param_pspec("layers/ln1", 2) == ("stage", None)
     assert _param_pspec("embed", 2) == ("model", "data")
     assert _param_pspec("lm_head", 2) == ("data", "model")
     assert _param_pspec("final_norm", 1) == (None,)
+    # hybrid pattern-unit stacks are not stage-partitioned (pipeline
+    # covers the uniform scanned families only)
+    assert _param_pspec("units/sub0/attn/wq", 3) == (None, "data",
+                                                     "model")
 
 
 def test_param_sharding_degrades_not_crashes():
@@ -143,17 +154,17 @@ def test_factor_pspec_sides():
     from repro.dist.sharding import _factor_pspec
 
     assert _factor_pspec((24, 16, 320, 320), "A", "layers/mlp/wg") == (
-        None, "data", None, None)
+        "stage", "data", None, None)
     assert _factor_pspec((24, 32, 864, 864), "G", "layers/mlp/wg") == (
-        None, "model", None, None)
+        "stage", "model", None, None)
     # row-parallel wd: transposed axes
     assert _factor_pspec((24, 32, 864, 864), "A", "layers/mlp/wd") == (
-        None, "model", None, None)
+        "stage", "model", None, None)
     assert _factor_pspec((24, 16, 320, 320), "G", "layers/mlp/wd") == (
-        None, "data", None, None)
+        "stage", "data", None, None)
     assert _factor_pspec((48, 64, 2, 1024, 1024), "A",
                          "layers/moe/wg") == (
-        None, "model", "data", None, None)
+        "stage", "model", "data", None, None)
 
 
 def test_block_size_for_alignment():

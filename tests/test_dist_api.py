@@ -51,8 +51,9 @@ def test_factor_axes_agrees_with_factor_pspec_dense():
         ain, gout = api.factor_axes(name)
         a_spec = _factor_pspec((4, 8, 64, 64), "A", name)
         g_spec = _factor_pspec((4, 8, 64, 64), "G", name)
-        assert a_spec == (None, ain, None, None), name
-        assert g_spec == (None, gout, None, None), name
+        # the leading (layer-stack) dim rides the pipeline stage axis
+        assert a_spec == ("stage", ain, None, None), name
+        assert g_spec == ("stage", gout, None, None), name
 
 
 def test_factor_axes_agrees_with_factor_pspec_moe():
@@ -65,8 +66,8 @@ def test_factor_axes_agrees_with_factor_pspec_moe():
         assert e_ax == "model"
         a_spec = _factor_pspec((4, 8, 2, 64, 64), "A", name)
         g_spec = _factor_pspec((4, 8, 2, 64, 64), "G", name)
-        assert a_spec == (None, e_ax, ain, None, None), name
-        assert g_spec == (None, e_ax, gout, None, None), name
+        assert a_spec == ("stage", e_ax, ain, None, None), name
+        assert g_spec == ("stage", e_ax, gout, None, None), name
 
 
 def test_factor_axes_never_repeats_a_mesh_axis():

@@ -1,0 +1,276 @@
+"""Pipeline subsystem unit tests (single-device).
+
+Schedule invariants (tick counts, bubbles, 1F1B ordering, stash depth
+= in-flight microbatches), the stage partitioner, the shared
+microbatch splitter, the weight-version (exactly-once) ledger, the
+K-FAC glue locality map, and the pp=1 bitwise-identity contract of
+``make_pipeline_step``. Multi-device execution parity lives in
+tests/test_pipeline_multidev.py.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.core import kfac as kfac_mod
+from repro.core.kfac import KFACConfig
+from repro.launch import steps as steps_mod
+from repro.launch.steps import TrainState
+from repro.pimsim.perf import pipeline_bubble_fraction
+from repro.pipeline import (
+    ExactlyOnceViolation,
+    SlotAllocator,
+    WeightStash,
+    kfac_glue,
+    make_schedule,
+    partition_stages,
+    split_microbatches,
+)
+from repro.pipeline.schedule import BWD, FWD, IDLE
+
+KCFG = KFACConfig(block_size=32, stats_batch=4, stats_seq=16)
+
+
+# ---------------------------------------------------------------------------
+# schedules
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["gpipe", "1f1b"])
+@pytest.mark.parametrize("S,M", [(1, 1), (2, 1), (2, 4), (3, 5),
+                                 (4, 8), (4, 2)])
+def test_schedule_ticks_and_bubbles(kind, S, M):
+    """Both schedules: 2(M+S-1) ticks, 2(S-1) idle ticks per stage,
+    bubble fraction equal to the pimsim analytic fill/drain model."""
+    s = make_schedule(kind, S, M)
+    assert s.n_ticks == 2 * (M + S - 1)
+    for st in range(S):
+        assert s.idle_ticks(st) == 2 * (S - 1)
+    assert s.bubble_fraction == pytest.approx(
+        pipeline_bubble_fraction(S, M))
+    s.check()
+    s.verify_exactly_once()
+
+
+@pytest.mark.parametrize("S,M", [(2, 4), (4, 8), (3, 6)])
+def test_stash_depth_is_inflight_microbatches(S, M):
+    """GPipe stashes all M in flight at every stage; 1F1B caps the
+    stash at min(M, S - s) — the schedule's whole point."""
+    g = make_schedule("gpipe", S, M)
+    assert all(g.peak_stash(s) == M for s in range(S))
+    f = make_schedule("1f1b", S, M)
+    for s in range(S):
+        assert f.peak_stash(s) == min(M, S - s)
+
+
+def test_1f1b_ordering():
+    """Per stage: warmup forwards, strict 1F1B alternation, drain
+    backwards — and microbatches retire in order."""
+    S, M = 4, 8
+    sched = make_schedule("1f1b", S, M)
+    for s in range(S):
+        ops = [(int(sched.op[t, s]), int(sched.mb[t, s]))
+               for t in range(sched.n_ticks)
+               if sched.op[t, s] != IDLE]
+        w = min(S - 1 - s, M)
+        expect = [(FWD, m) for m in range(w)]
+        for i in range(M - w):
+            expect += [(FWD, w + i), (BWD, i)]
+        expect += [(BWD, m) for m in range(M - w, M)]
+        assert ops == expect
+
+
+def test_schedule_rejects_unknown_kind():
+    with pytest.raises(ValueError, match="unknown schedule"):
+        make_schedule("pipedream", 2, 4)
+
+
+# ---------------------------------------------------------------------------
+# stash
+# ---------------------------------------------------------------------------
+
+def test_slot_allocator_free_list():
+    a = SlotAllocator()
+    s0, s1 = a.alloc(), a.alloc()
+    assert (s0, s1) == (0, 1) and a.peak == 2
+    a.free(s0)
+    assert a.alloc() == 0          # smallest free slot reused
+    assert a.peak == 2
+    with pytest.raises(ValueError):
+        a.free(7)
+
+
+def test_weight_stash_exactly_once():
+    ws = WeightStash(depth=1)
+    ws.forward(0)
+    ws.forward(1)
+    with pytest.raises(ExactlyOnceViolation):
+        ws.commit_update()         # microbatches still in flight
+    ws.backward(0)
+    ws.backward(1)
+    ws.commit_update()
+    ws.forward(2)
+    with pytest.raises(ExactlyOnceViolation):
+        ws.backward(3)             # never forwarded
+    ws.reset()
+    assert ws.in_flight == 0
+
+
+def test_weight_stash_version_gap():
+    ws = WeightStash(depth=1)
+    ws.forward(0)
+    ws._inflight[0] = ws.version - 1     # simulate an update mid-flight
+    with pytest.raises(ExactlyOnceViolation):
+        ws.backward(0)
+
+
+# ---------------------------------------------------------------------------
+# stage partition
+# ---------------------------------------------------------------------------
+
+def test_partition_balanced_and_pinned():
+    cfg = get_smoke_config("qwen1.5-0.5b")
+    p = partition_stages(cfg, 2)
+    assert p.boundaries[0] == 0 and p.boundaries[-1] == cfg.n_layers
+    assert all(b1 < b2 for b1, b2 in zip(p.boundaries, p.boundaries[1:]))
+    # head cost (vocab matmul) lands on the last stage
+    from repro.pipeline.stages import head_flops, layer_flops
+
+    per_layer = layer_flops(cfg, "attn")
+    n_last = p.boundaries[-1] - p.boundaries[-2]
+    assert p.costs[-1] == pytest.approx(
+        n_last * per_layer + head_flops(cfg))
+
+
+def test_partition_uniform_requirement():
+    cfg = get_smoke_config("qwen1.5-0.5b")          # 2 layers
+    p = partition_stages(cfg, 2, require_uniform=True)
+    assert p.uniform and p.layer_counts() == (1, 1)
+    with pytest.raises(ValueError, match="not divisible"):
+        big = dataclasses.replace(cfg, n_layers=3)
+        partition_stages(big, 2, require_uniform=True)
+
+
+def test_partition_rejects_unsupported_families():
+    with pytest.raises(NotImplementedError):
+        partition_stages(get_smoke_config("whisper-tiny"), 2)
+    with pytest.raises(NotImplementedError):
+        partition_stages(get_smoke_config("recurrentgemma-9b"), 2)
+
+
+def test_partition_balances_nonuniform_head():
+    """With a heavy head pin, the free partition shifts layers off the
+    last stage (cost balance beats count balance)."""
+    cfg = dataclasses.replace(get_smoke_config("qwen1.5-0.5b"),
+                              n_layers=8, vocab=8192)
+    p = partition_stages(cfg, 2)
+    assert p.boundaries[1] >= 4          # last stage never over-full
+    assert p.imbalance < 2.0
+
+
+# ---------------------------------------------------------------------------
+# microbatch splitter (shared with gradient accumulation)
+# ---------------------------------------------------------------------------
+
+def test_split_microbatches_shapes_and_values():
+    b = {
+        "tokens": jnp.arange(8 * 6).reshape(8, 6),
+        "positions": jnp.arange(3 * 8 * 6).reshape(3, 8, 6),
+    }
+    out = split_microbatches(b, 2)
+    assert out["tokens"].shape == (2, 4, 6)
+    np.testing.assert_array_equal(np.asarray(out["tokens"][0]),
+                                  np.asarray(b["tokens"][:4]))
+    assert out["positions"].shape == (2, 3, 4, 6)
+    np.testing.assert_array_equal(
+        np.asarray(out["positions"][1][2]),
+        np.asarray(b["positions"][2, 4:]))
+
+
+def test_split_microbatches_planes_not_hardcoded():
+    """M-RoPE plane count comes from the array (4-plane variant works)."""
+    b = {"positions": jnp.zeros((4, 8, 6), jnp.int32)}
+    out = split_microbatches(b, 2)
+    assert out["positions"].shape == (2, 4, 4, 6)
+
+
+def test_split_microbatches_clear_error():
+    b = {"tokens": jnp.zeros((6, 4), jnp.int32)}
+    with pytest.raises(ValueError) as e:
+        split_microbatches(b, 4)
+    msg = str(e.value)
+    assert "tokens" in msg and "6" in msg and "4" in msg
+
+
+def test_launch_splitter_delegates():
+    """launch/steps._split_microbatches rides the shared splitter (same
+    layout as before, plus the hints)."""
+    b = {"tokens": jnp.arange(8 * 6).reshape(8, 6)}
+    out = steps_mod._split_microbatches(b, 2)
+    np.testing.assert_array_equal(
+        np.asarray(out["tokens"]),
+        np.asarray(split_microbatches(b, 2)["tokens"]))
+    with pytest.raises(ValueError, match="tokens"):
+        steps_mod._split_microbatches(b, 3)
+
+
+# ---------------------------------------------------------------------------
+# K-FAC glue
+# ---------------------------------------------------------------------------
+
+def test_stage_specs_locality():
+    cfg = get_smoke_config("qwen1.5-0.5b")
+    part = partition_stages(cfg, 2, require_uniform=True)
+    specs = steps_mod.kfac_specs(cfg)
+    per_stage = kfac_glue.stage_specs(specs, part)
+    assert len(per_stage) == 2
+    for d in per_stage:
+        assert set(d) == set(specs)
+        for name, spec in d.items():
+            assert spec.stack[0] == 1          # 2 layers over 2 stages
+            assert spec.d_in == specs[name].d_in
+
+
+def test_inv_fits_bubbles_accounting():
+    sched = make_schedule("1f1b", 2, 4)
+    assert kfac_glue.bubble_ticks(sched) == 2
+    assert kfac_glue.inv_fits_bubbles(sched, inv_flops=10.0,
+                                      tick_flops=10.0)
+    assert not kfac_glue.inv_fits_bubbles(sched, inv_flops=100.0,
+                                          tick_flops=10.0)
+
+
+# ---------------------------------------------------------------------------
+# pp=1 identity
+# ---------------------------------------------------------------------------
+
+def test_pp1_is_bitwise_make_train_step():
+    """make_pipeline_step(pp=1) lowers to today's monolithic program —
+    same function, bitwise-identical outputs."""
+    cfg = get_smoke_config("qwen1.5-0.5b")
+    mod = steps_mod.model_module(cfg)
+    params = mod.init(cfg, jax.random.PRNGKey(0))
+    specs = steps_mod.kfac_specs(cfg)
+    r = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(
+        r.integers(0, cfg.vocab, (4, 16)), jnp.int32)}
+
+    ref_fn = steps_mod.make_train_step(cfg, KCFG)
+    pp1_fn = steps_mod.make_pipeline_step(cfg, KCFG, pp=1)
+    s_ref, m_ref = jax.jit(ref_fn)(
+        TrainState(params, kfac_mod.init(params, specs, KCFG)), batch)
+    s_pp1, m_pp1 = jax.jit(pp1_fn)(
+        TrainState(params, kfac_mod.init(params, specs, KCFG)), batch)
+    assert float(m_ref["loss"]) == float(m_pp1["loss"])
+    for a, b in zip(jax.tree.leaves(s_ref), jax.tree.leaves(s_pp1)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_pipeline_step_requires_mesh():
+    cfg = get_smoke_config("qwen1.5-0.5b")
+    with pytest.raises(ValueError, match="stage"):
+        steps_mod.make_pipeline_step(cfg, KCFG, pp=2)
