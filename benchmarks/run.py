@@ -14,22 +14,96 @@ schema contract (what trajectory tooling can rely on):
   ``status=ok``) additionally appear for modules that ran and expose a
   ``headline()``; a skipped module's values are simply absent — its
   status row is the stable placeholder.
+
+Every ``BENCH_*.json`` artifact the modules drop is additionally rolled
+into ``BENCH_summary.json`` — one row per benchmark file with the
+median of its wall-time metrics (keys containing ``wall`` or spelled
+``ms_*``/``*_ms``), under a stable schema so CI trend tooling never has
+to know each module's own layout. ``--summarize`` writes the scorecard
+from whatever artifacts already exist without re-running anything.
 """
 
 from __future__ import annotations
 
 import argparse
+import glob
+import json
+import os
+import statistics
 import sys
 import time
 import traceback
 
 from benchmarks.common import print_csv
 
+SUMMARY_SCHEMA = 1
+
+
+def _wall_values(obj, key=""):
+    """Every numeric leaf whose key names a wall time, recursively."""
+    vals = []
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            vals.extend(_wall_values(v, k))
+    elif isinstance(obj, list):
+        for v in obj:
+            vals.extend(_wall_values(v, key))
+    elif isinstance(obj, (int, float)) and not isinstance(obj, bool):
+        k = key.lower()
+        if "wall" in k or k.startswith("ms_") or k.endswith("_ms"):
+            vals.append(float(obj))
+    return vals
+
+
+def summary_rows(directory="."):
+    """One row per BENCH_*.json artifact (stable schema: benchmark,
+    file, status, n_wall_metrics, wall_ms_median)."""
+    rows = []
+    for path in sorted(glob.glob(os.path.join(directory,
+                                              "BENCH_*.json"))):
+        fname = os.path.basename(path)
+        name = fname[len("BENCH_"):-len(".json")]
+        if name == "summary":
+            continue
+        row = {"benchmark": name, "file": fname,
+               "n_wall_metrics": 0, "wall_ms_median": None}
+        try:
+            with open(path) as f:
+                walls = _wall_values(json.load(f))
+        except (OSError, ValueError):
+            row["status"] = "unreadable"
+        else:
+            row["status"] = "ok"
+            row["n_wall_metrics"] = len(walls)
+            if walls:
+                row["wall_ms_median"] = round(
+                    statistics.median(walls), 3)
+        rows.append(row)
+    return rows
+
+
+def write_summary(directory="."):
+    rows = summary_rows(directory)
+    out = {"schema": SUMMARY_SCHEMA, "generated_by": "benchmarks.run",
+           "rows": rows}
+    with open(os.path.join(directory, "BENCH_summary.json"), "w") as f:
+        json.dump(out, f, indent=1)
+    return rows
+
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--summarize", action="store_true",
+                    help="only aggregate existing BENCH_*.json into "
+                         "BENCH_summary.json (no benchmarks run)")
     args = ap.parse_args(argv)
+
+    if args.summarize:
+        print_csv("bench_summary", [
+            {k: str(v) for k, v in r.items()}
+            for r in write_summary()])
+        return 0
 
     from benchmarks import (
         area,
@@ -102,7 +176,8 @@ def main(argv=None):
     # forced-multidevice children (each spawns its own 4-device guard
     # subprocess — the pattern shared with grad_compression)
     if args.fast:
-        run("dist_inverse", dist_inverse.main, skip=fast_skip)
+        run("dist_inverse", lambda: dist_inverse.main([]),
+            skip=fast_skip)
         run("pipeline_bench", pipeline_bench.main, skip=fast_skip)
         run("grad_compression_dcn", None, skip=fast_skip)
         run("sec6c_kfac_convergence",
@@ -110,7 +185,9 @@ def main(argv=None):
                               kfac_convergence.rows(fast=True)),
             note="quadratic probe only (--fast)")
     else:
-        run("dist_inverse", dist_inverse.main)
+        # full mode also exercises the incremental-SOI (SMW + pdiv)
+        # probe; both paths drop BENCH_dist_inverse.json
+        run("dist_inverse", lambda: dist_inverse.main(["--smw"]))
 
         # pipelined FP/BP vs the pimsim bubble model;
         # writes BENCH_pipeline.json
@@ -125,6 +202,8 @@ def main(argv=None):
 
     print_csv("reproduction_scorecard", [
         {k: str(v) for k, v in e.items()} for e in scorecard])
+    print_csv("bench_summary", [
+        {k: str(v) for k, v in r.items()} for r in write_summary()])
     return failures
 
 

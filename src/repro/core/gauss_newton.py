@@ -30,6 +30,21 @@ def gn_specs(specs: Mapping[str, LinearSpec]) -> dict:
     }
 
 
+def stats_rank_k(loss_with_taps, params, taps, batch,
+                 specs: Mapping[str, LinearSpec], bs: int):
+    """G-only rank-k statistics: ``(G_grams, cols, loss)``.
+
+    The Gauss-Newton ablation preconditions with the output-side factor
+    only, so its per-step rank-k contribution is exactly the tap-
+    gradient columns ``kfac.stats_rank_k`` materializes — the A side is
+    dropped (A = I never drifts). The cols tree feeds the same SMW
+    incremental refresh (``repro.solve.smw``) as full K-FAC."""
+    _, g_grams, cols, loss = kfac.stats_rank_k(
+        loss_with_taps, params, taps, batch, specs, bs)
+    cols = {name: {"G": entry["G"]} for name, entry in cols.items()}
+    return g_grams, cols, loss
+
+
 def refresh_inverses(state: KFACState, cfg: KFACConfig, *,
                      mesh=None, plan=None) -> KFACState:
     """G-only inverse refresh through the block-parallel solve layer.

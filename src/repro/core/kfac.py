@@ -110,6 +110,17 @@ def make_taps(specs: Mapping[str, LinearSpec], tokens: int) -> dict:
             for name, spec in specs.items()}
 
 
+def _stats_pass(loss_with_taps, params, taps, batch):
+    """One tapped fwd+bwd: ``(loss, acts, tap_grads)``."""
+    def f(p, t):
+        loss, acts = loss_with_taps(p, t, batch)
+        return loss, acts
+
+    (loss, acts), tap_grads = jax.value_and_grad(
+        f, argnums=1, has_aux=True)(params, taps)
+    return loss, acts, tap_grads
+
+
 def stats_grams(
     loss_with_taps: Callable[..., Tuple[jax.Array, dict]],
     params: Any,
@@ -125,12 +136,8 @@ def stats_grams(
     (*stack, T, d_in) (or a precomputed blocked Gram, shape
     (*stack, nb, bs, bs)).
     """
-    def f(p, t):
-        loss, acts = loss_with_taps(p, t, batch)
-        return loss, acts
-
-    (loss, acts), tap_grads = jax.value_and_grad(
-        f, argnums=1, has_aux=True)(params, taps)
+    loss, acts, tap_grads = _stats_pass(loss_with_taps, params, taps,
+                                        batch)
 
     a_grams, g_grams = {}, {}
     for name, spec in specs.items():
@@ -148,6 +155,52 @@ def stats_grams(
             else:
                 a_grams[name] = soi.blocked_gram(a, bs)
     return a_grams, g_grams, loss
+
+
+def stats_rank_k(
+    loss_with_taps: Callable[..., Tuple[jax.Array, dict]],
+    params: Any,
+    taps: dict,
+    batch: Any,
+    specs: Mapping[str, LinearSpec],
+    bs: int,
+) -> Tuple[dict, dict, dict, jax.Array]:
+    """SU pass that additionally exposes the rank-k column factors:
+    ``(A_grams, G_grams, cols, loss)``.
+
+    The per-step Gram contribution of every factor block is a rank-k
+    product ``V^T V * w`` with k = subsample tokens — the G side's ``V``
+    is the tap gradient (already materialized for ``stats_grams``), the
+    A side's is the blocked activation columns, which requires the model
+    to have been called with ``collect="cols"`` (``acts[name]`` is then
+    ``soi.blocked_tokens``, shape (*stack, T, nb, bs), instead of a
+    precomputed Gram). ``cols[name][side]`` is (*stack, nb, k, bs);
+    the weight convention (``repro.solve.smw`` relies on it) is
+    ``w = 1/k`` for A (token-mean Gram) and ``w = 1`` for G (Fisher
+    sum-over-tokens). The returned Grams are bitwise identical to
+    :func:`stats_grams` on the same inputs, so the factor EMA trajectory
+    does not depend on which stats path ran. Contract: with
+    ``collect="cols"`` every collected A entry *is* blocked tokens
+    (``models.layers`` honors the sentinel in every stats writer);
+    a shape-sniff as in :func:`stats_grams` would be ambiguous here
+    (tokens with nb == bs look square too).
+    """
+    loss, acts, tap_grads = _stats_pass(loss_with_taps, params, taps,
+                                        batch)
+
+    a_grams, g_grams, cols = {}, {}, {}
+    for name, spec in specs.items():
+        g = tap_grads[name]                        # (*stack, T, d_out)
+        t = g.shape[-2]
+        g_grams[name] = soi.blocked_gram(g, bs) * jnp.asarray(
+            t, jnp.float32)
+        entry = {"G": soi.cols_from_tokens(soi.blocked_tokens(g, bs))}
+        if spec.share_a_with is None:
+            a = acts[name]              # blocked tokens (*stack,T,nb,bs)
+            a_grams[name] = soi.gram_from_tokens(a)
+            entry["A"] = soi.cols_from_tokens(a)
+        cols[name] = entry
+    return a_grams, g_grams, cols, loss
 
 
 def update_factors(state: KFACState, a_grams: dict, g_grams: dict,
@@ -198,7 +251,8 @@ def _invert_blocks(f: jax.Array, cfg: KFACConfig) -> jax.Array:
     return invert_blocks_flat(flat, lam.reshape(-1), cfg).reshape(shape)
 
 
-def refresh_inverses(state: KFACState, cfg: KFACConfig) -> KFACState:
+def refresh_inverses(state: KFACState, cfg: KFACConfig, *,
+                     plan=None) -> KFACState:
     """Replicated inverse refresh: every device inverts every block.
 
     This is the baseline SU/INV graph. Production meshes should prefer
@@ -206,7 +260,20 @@ def refresh_inverses(state: KFACState, cfg: KFACConfig) -> KFACState:
     ``launch/steps.make_inv_refresh``), where each device inverts only
     its plan-owned ~1/ndev share — the paper's INV-crossbar-group
     distribution — and optionally the async double-buffered refresh
-    (``repro.solve.AsyncInverseRefresher``)."""
+    (``repro.solve.AsyncInverseRefresher``).
+
+    ``plan`` (a ``repro.solve.Plan`` built once host-side) reuses the
+    partitioner's pooled block layout instead of re-deriving the
+    per-leaf blocking on every call, so a sync refresh and the SMW
+    fallback refresh share one plan object (and one traced pooling)
+    rather than rebuilding that work per call. Results are bitwise
+    identical either way (``invert_blocks_flat`` is the shared
+    primitive; tests pin the pooled/per-leaf parity)."""
+    if plan is not None:
+        from repro.solve.block_solver import invert_factor_tree
+
+        return state._replace(inverses=invert_factor_tree(
+            state.factors, cfg, plan=plan))
     new_inv = {}
     for name, f in state.factors.items():
         d = {}

@@ -122,6 +122,43 @@ def blocked_gram(a: jax.Array, cap: int) -> jax.Array:
     return gram / jnp.asarray(t, jnp.float32)
 
 
+def blocked_tokens(a: jax.Array, cap: int) -> jax.Array:
+    """Blocked token columns of activations — the rank-k *square root*
+    of :func:`blocked_gram`.
+
+    ``a``: (..., T, d) -> (..., T, nb, bs), exactly the padded reshape
+    :func:`blocked_gram` performs before its einsum. Keeping the raw
+    columns (instead of contracting them on the spot) is what feeds the
+    Sherman-Morrison-Woodbury incremental inverse refresh
+    (``repro.solve.smw``): each step's Gram contribution is
+    ``cols^T cols / T`` per block, rank ``T`` instead of a dense
+    ``bs x bs`` rewrite — the PANTHER outer-product-update form.
+    """
+    bs = block_size_for(a.shape[-1], cap)
+    a = pad_to_blocks(a, -1, bs)
+    nb = a.shape[-1] // bs
+    return a.reshape(a.shape[:-1] + (nb, bs))
+
+
+def gram_from_tokens(bt: jax.Array) -> jax.Array:
+    """(..., T, nb, bs) blocked tokens -> (..., nb, bs, bs) Gram.
+
+    Same einsum (and therefore bitwise the same result) as
+    :func:`blocked_gram` on the raw activations — the cols-collecting
+    stats path uses this so the factor EMA stays on the standard
+    trajectory while the columns ride along for SMW."""
+    t = bt.shape[-3]
+    gram = jnp.einsum("...tib,...tic->...ibc", bt, bt,
+                      preferred_element_type=jnp.float32)
+    return gram / jnp.asarray(t, jnp.float32)
+
+
+def cols_from_tokens(bt: jax.Array) -> jax.Array:
+    """(..., T, nb, bs) blocked tokens -> (..., nb, T, bs) per-block
+    column factors ``V`` with Gram contribution ``V^T V / T``."""
+    return jnp.moveaxis(bt, -3, -2)
+
+
 def factor_shapes(spec: LinearSpec, cap: int) -> dict:
     """Zero-initialized factor pytree for one linear (per-side
     mesh-aligned block sizes)."""

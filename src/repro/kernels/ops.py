@@ -22,9 +22,10 @@ from repro.kernels.bitslice_mm import bitslice_mm as _bitslice_mm
 from repro.kernels.fused_gram_solve import fused_gram_inv as _fused_gram_inv
 from repro.kernels.fused_precond import fused_precond as _fused_precond
 from repro.kernels.neumann_inv import neumann_inv as _neumann_inv
+from repro.kernels.smw_update import smw_update as _smw_update
 
 __all__ = ["bitslice_mm", "neumann_inv", "fused_gram_inv",
-           "fused_precond", "on_tpu"]
+           "fused_precond", "smw_update", "on_tpu"]
 
 
 def on_tpu() -> bool:
@@ -50,3 +51,9 @@ def fused_precond(a_inv: jax.Array, g: jax.Array, g_inv: jax.Array,
                   **kw):
     kw.setdefault("interpret", not on_tpu())
     return _fused_precond(a_inv, g, g_inv, **kw)
+
+
+def smw_update(inv: jax.Array, v: jax.Array, *, decay: float,
+               cscale: float, **kw) -> jax.Array:
+    kw.setdefault("interpret", not on_tpu())
+    return _smw_update(inv, v, decay=decay, cscale=cscale, **kw)

@@ -104,6 +104,52 @@ def fused_precond_ref(a_inv: jax.Array, g: jax.Array,
     return jax.vmap(one)(a_inv, g, g_inv)
 
 
+def smw_update_ref(inv: jax.Array, v: jax.Array, *, decay: float,
+                   cscale: float) -> jax.Array:
+    """Oracle for kernels.smw_update: the identical padded two-pass
+    pipeline — per-block hi/lo partial products in the same order the
+    interpreted grid executes them, and the *same* batched k x k solve
+    expression between passes — so the kernel must match bitwise."""
+    n, k, bs = v.shape
+    bs_p = max(128, (-(-bs // 128)) * 128)
+    k_p = max(128, (-(-k // 128)) * 128)
+
+    def pad2(x, r, c):
+        return jnp.pad(x, [(0, 0), (0, r - x.shape[-2]),
+                           (0, c - x.shape[-1])])
+
+    inv_p = pad2(inv.astype(jnp.float32), bs_p, bs_p)
+    v_p = pad2(v.astype(jnp.float32), k_p, bs_p)
+    inv_decay = jnp.float32(0.5 / decay)
+    ms, ys, ss = [], [], []
+    for i in range(n):
+        m1 = (inv_p[i] + inv_p[i].T) * inv_decay
+        y1 = hilo_matmul(v_p[i], m1)
+        ms.append(m1)
+        ys.append(y1)
+        ss.append(hilo_matmul(y1, v_p[i].T))
+    y = jnp.stack(ys)
+    s_full = jnp.stack(ss) + jnp.eye(k_p, dtype=jnp.float32) \
+        / jnp.float32(cscale)
+    z = jnp.linalg.solve(s_full, y)
+    out = jnp.stack([ms[i] - hilo_matmul(ys[i].T, z[i])
+                     for i in range(n)])
+    return out[:, :bs, :bs]
+
+
+def exact_smw_update(inv: jax.Array, v: jax.Array, *, decay: float,
+                     cscale: float) -> jax.Array:
+    """fp32 einsum reference bounding the bit-sliced kernel's error
+    (the same math ``solve.smw.smw_update_flat`` runs on the jnp path)."""
+    k = v.shape[-2]
+    m = (inv + jnp.swapaxes(inv, -1, -2)) * jnp.float32(0.5 / decay)
+    y = jnp.einsum("nkb,nbc->nkc", v.astype(jnp.float32), m)
+    s = jnp.einsum("nkb,nlb->nkl", y, v.astype(jnp.float32)) \
+        + jnp.eye(k, dtype=jnp.float32) / jnp.float32(cscale)
+    z = jnp.linalg.solve(s, y)
+    return m - jnp.einsum("nka,nkb->nab", y, z)
+
+
 def exact_two_sided(a_inv: jax.Array, g: jax.Array,
                     g_inv: jax.Array) -> jax.Array:
     """fp32 linalg reference bounding the bit-sliced kernel's error."""

@@ -290,23 +290,28 @@ def make_sgd_step(cfg: ModelConfig, lr: float = 1e-2,
     return sgd_step
 
 
+def _build_taps(cfg: ModelConfig, mod, specs, batch):
+    """Zero tap buffers for one stats batch (audio keeps per-name token
+    counts: encoder taps see frames, decoder taps see tokens)."""
+    b, t = batch["tokens"].shape
+    if cfg.family == "audio":
+        te = batch["enc_embeds"].shape[1]
+        taps = {}
+        for name, s in specs.items():
+            n_tok = b * (te if name.startswith("enc/") else t)
+            taps[name] = jnp.zeros(
+                s.stack + (n_tok, s.d_out), jnp.float32)
+        return taps
+    return mod.build_taps(cfg, specs, b * t)
+
+
 def make_stats_step(cfg: ModelConfig, kcfg: KFACConfig) -> Callable:
     """SU graph: factor Grams on a token subsample, EMA'd into state."""
     mod = model_module(cfg)
     specs = kfac_specs(cfg)
 
     def stats_step(state: TrainState, batch) -> Tuple[TrainState, dict]:
-        if cfg.family == "audio":
-            b, t = batch["tokens"].shape
-            te = batch["enc_embeds"].shape[1]
-            taps = {}
-            for name, s in specs.items():
-                n_tok = b * (te if name.startswith("enc/") else t)
-                taps[name] = jnp.zeros(
-                    s.stack + (n_tok, s.d_out), jnp.float32)
-        else:
-            b, t = batch["tokens"].shape
-            taps = mod.build_taps(cfg, specs, b * t)
+        taps = _build_taps(cfg, mod, specs, batch)
 
         def loss_with_taps(p, tp, bt):
             return mod.loss_fn(cfg, p, bt, taps=tp, collect=True)
@@ -318,6 +323,45 @@ def make_stats_step(cfg: ModelConfig, kcfg: KFACConfig) -> Callable:
         return state._replace(kfac=kstate2), {"stats_loss": loss}
 
     return stats_step
+
+
+def make_smw_step(cfg: ModelConfig, kcfg: KFACConfig,
+                  scfg=None) -> Callable:
+    """Fused SU + incremental-INV graph: rank-k stats, factor EMA, SMW
+    inverse update and the drift probe in ONE program.
+
+    The same tap construction as :func:`make_stats_step`, but the model
+    collects column factors (``collect="cols"``) so the Gram never has
+    to be re-factored; ``kfac.stats_rank_k`` keeps the factor-EMA
+    trajectory bitwise identical to the ``stats_grams`` path while also
+    exposing the columns the Woodbury update consumes. Runs every step
+    (SMW mode has no stats/inv cadence); the returned metrics carry
+    ``smw_drift`` for the host-side fallback gate
+    (``repro.solve.SMWRefresher``).
+    """
+    from repro.solve import smw as smw_mod
+
+    scfg = scfg or smw_mod.SMWConfig()
+    mod = model_module(cfg)
+    specs = kfac_specs(cfg)
+
+    def smw_step(state: TrainState, batch) -> Tuple[TrainState, dict]:
+        taps = _build_taps(cfg, mod, specs, batch)
+
+        def loss_with_taps(p, tp, bt):
+            return mod.loss_fn(cfg, p, bt, taps=tp, collect="cols")
+
+        a_grams, g_grams, cols, loss = kfac.stats_rank_k(
+            loss_with_taps, state.params, taps, batch, specs,
+            kcfg.block_size)
+        kstate2 = kfac.update_factors(state.kfac, a_grams, g_grams, kcfg)
+        new_inv, drift = smw_mod.smw_refresh(
+            kstate2.inverses, kstate2.factors, cols, kcfg, scfg)
+        kstate2 = kstate2._replace(inverses=new_inv)
+        return (state._replace(kfac=kstate2),
+                {"stats_loss": loss, "smw_drift": drift})
+
+    return smw_step
 
 
 def make_inv_refresh(cfg: ModelConfig, kcfg: KFACConfig, *,

@@ -37,7 +37,7 @@ from repro.dist.api import mesh_ndev
 from repro.launch import steps as steps_mod
 from repro.launch.steps import TrainState
 from repro.runtime import DeviceLoss, LoopConfig, TrainLoop, elastic_mesh
-from repro.solve import AsyncInverseRefresher
+from repro.solve import AsyncInverseRefresher, SMWConfig, SMWRefresher
 
 
 def _key_of_path(path) -> str:
@@ -76,6 +76,13 @@ class KFACProgram:
     With ``async_inv`` the SOI refresh is dispatched right before the
     pipeline program so the INV work overlaps the fill/drain bubbles
     (``pipeline.kfac_glue``).
+    ``smw``: incremental SOI — the stats/inv cadences are replaced by
+    one fused rank-k program per step (SU stats + factor EMA + SMW
+    inverse update + drift probe, ``repro.solve.smw``); the inverses
+    are never stale, and a measured drift above ``smw_drift_budget``
+    triggers a full re-inversion through the same donated refresh
+    program. Mutually exclusive with ``async_inv`` (nothing to
+    overlap — there is no inv cadence left).
     """
 
     cfg: Any
@@ -86,10 +93,18 @@ class KFACProgram:
     fused_wu: bool = True
     pp: int = 1
     pp_schedule: str = "1f1b"
+    smw: bool = False
+    smw_drift_budget: float = 0.05
+    smw_rank: int = 64
 
     def __post_init__(self):
         self._refresher = None
+        self._smw = None
         self._sched = None
+        if self.smw and self.async_inv:
+            raise ValueError(
+                "--smw refreshes the inverses inside every step; there "
+                "is no inv cadence left for --async-inv to overlap")
 
     def _shardings(self, mesh, ab=None):
         ab = ab or steps_mod.abstract_train_state(self.cfg, self.kcfg)
@@ -170,7 +185,20 @@ class KFACProgram:
                 refresh_into=refresh_into, spare_buffers=spare)
         else:
             self._refresher = None
+        if self.smw:
+            scfg = SMWConfig(drift_budget=self.smw_drift_budget,
+                             rank=self.smw_rank)
+            smw_jit = jax.jit(
+                steps_mod.make_smw_step(self.cfg, self.kcfg, scfg),
+                in_shardings=(st_shard, b_spec),
+                out_shardings=(st_shard, None),
+                donate_argnums=(0,))
+            self._smw = SMWRefresher(smw_jit, refresh_into,
+                                     drift_budget=self.smw_drift_budget)
+        else:
+            self._smw = None
         refresher = self._refresher
+        smw_ref = self._smw
         kcfg = self.kcfg
         sched = self._sched
 
@@ -186,6 +214,14 @@ class KFACProgram:
             return out
 
         def step_fn(state: TrainState, batch):
+            if smw_ref is not None:
+                # incremental SOI: one fused rank-k program every step
+                # (stats + EMA + SMW inverse update + drift probe), the
+                # host gate falls back to refresh_into on drift
+                state, metrics = smw_ref.step(state, subsample(batch))
+                state, m = train(state, batch)
+                metrics.update(m)
+                return state, metrics
             i = int(jax.device_get(state.kfac.step))
             metrics = {}
             if i % kcfg.stats_every == 0:
@@ -231,6 +267,8 @@ class KFACProgram:
         factors no longer match what was dispatched)."""
         if self._refresher is not None:
             self._refresher.reset()
+        if self._smw is not None:
+            self._smw.reset()
 
     def state_sharding(self, mesh):
         lookup = _sharding_lookup(self._shardings(mesh))
@@ -310,6 +348,18 @@ def main(argv=None):
                     help="pooled fused WU graph: one batched VMM⊕INV "
                          "program for precondition+update (bitwise "
                          "identical to the per-leaf path it replaces)")
+    ap.add_argument("--smw", action=argparse.BooleanOptionalAction,
+                    default=False,
+                    help="incremental SOI: rank-k SMW inverse refresh "
+                         "every step (no stats/inv cadence, no stale "
+                         "inverses), drift-gated full-reinversion "
+                         "fallback")
+    ap.add_argument("--smw-drift-budget", type=float, default=0.05,
+                    help="probe-residual level that triggers the full "
+                         "re-inversion fallback on the SMW path")
+    ap.add_argument("--smw-rank", type=int, default=64,
+                    help="max rank per SMW update; larger token sets "
+                         "are strided down to this many columns")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=20)
     ap.add_argument("--inject-failure-at", type=int, default=-1,
@@ -332,7 +382,10 @@ def main(argv=None):
                               async_inv=args.async_inv,
                               fused_wu=args.fused_wu,
                               pp=args.pp,
-                              pp_schedule=args.pp_schedule)
+                              pp_schedule=args.pp_schedule,
+                              smw=args.smw,
+                              smw_drift_budget=args.smw_drift_budget,
+                              smw_rank=args.smw_rank)
     else:
         if args.pp > 1:
             raise SystemExit("--pp > 1 is a KFACProgram feature; the "

@@ -25,7 +25,12 @@ from repro.dist.api import BATCH_AXES, DATA, MODEL, shard_hint
 @dataclasses.dataclass
 class Ctx:
     """Per-layer forward context (inside scan, taps/stats are the slices
-    of the current layer)."""
+    of the current layer).
+
+    ``collect`` is False (off), True (record the input-side blocked
+    Gram), or the string ``"cols"`` (record the raw blocked token
+    columns — ``soi.blocked_tokens`` — whose Gram is the same statistic;
+    the SMW rank-k refresh path needs the columns themselves)."""
 
     taps: Optional[Dict[str, jax.Array]] = None
     collect: bool = False
@@ -61,7 +66,10 @@ def dense(x: jax.Array, w: jax.Array, name: str, ctx: Optional[Ctx] = None,
         if ctx.collect and collect_gram:
             a = x.astype(jnp.float32)
             a = a.reshape(a.shape[:stack_dims] + (-1, a.shape[-1]))
-            ctx.stats[name] = soi.blocked_gram(a, ctx.soi_block)
+            ctx.stats[name] = (
+                soi.blocked_tokens(a, ctx.soi_block)
+                if ctx.collect == "cols"
+                else soi.blocked_gram(a, ctx.soi_block))
         if ctx.taps is not None and name in ctx.taps:
             y = y + ctx.taps[name].reshape(y.shape)
     return y.astype(dt)
@@ -79,8 +87,11 @@ def dense_stacked(x: jax.Array, w: jax.Array, name: str,
                    preferred_element_type=jnp.float32)
     if ctx is not None:
         if ctx.collect and collect_gram:
-            ctx.stats[name] = soi.blocked_gram(
-                x.astype(jnp.float32), ctx.soi_block)
+            xf = x.astype(jnp.float32)
+            ctx.stats[name] = (
+                soi.blocked_tokens(xf, ctx.soi_block)
+                if ctx.collect == "cols"
+                else soi.blocked_gram(xf, ctx.soi_block))
         if ctx.taps is not None and name in ctx.taps:
             y = y + ctx.taps[name].reshape(y.shape)
     return y.astype(dt)

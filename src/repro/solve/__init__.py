@@ -23,9 +23,21 @@ TPU-mesh image of that mapping:
                  the inverse all-gather — the paper's VMM⊕INV fused
                  crossbar groups (Sec. V); the WU *plan* that pools
                  every gradient tile lives in ``partition.make_wu_plan``
+  smw            incremental SOI: Sherman-Morrison-Woodbury rank-k
+                 refresh of every cached inverse each step (PANTHER-
+                 style crossbar rank-k updates), drift-monitored with a
+                 full-reinversion fallback (``SMWRefresher`` hosts the
+                 gate)
+  pdiv           2-way recursive block-Schur divide-and-conquer: a
+                 factor block larger than one device's pool share is
+                 inverted *across* the mesh, bitwise-consistent with
+                 the single-device solver
 """
 
-from repro.solve.async_refresh import AsyncInverseRefresher  # noqa: F401
+from repro.solve.async_refresh import (  # noqa: F401
+    AsyncInverseRefresher,
+    SMWRefresher,
+)
 from repro.solve.block_solver import invert_factor_tree  # noqa: F401
 from repro.solve.fused_wu import (  # noqa: F401
     DEFAULT_DIST_MODE,
@@ -37,4 +49,10 @@ from repro.solve.partition import (  # noqa: F401
     inverse_block_flops,
     make_plan,
     make_wu_plan,
+)
+from repro.solve.pdiv import pdiv_invert  # noqa: F401
+from repro.solve.smw import (  # noqa: F401
+    SMWConfig,
+    probe_drift,
+    smw_refresh,
 )

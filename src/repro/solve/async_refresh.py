@@ -122,3 +122,84 @@ class AsyncInverseRefresher:
         if self._pending is not None and self._spare is None:
             self._spare = self._pending
         self._pending = None
+
+
+class SMWRefresher:
+    """Every-step incremental (SMW) refresh with a drift-gated fallback.
+
+    The anti-thesis of ``AsyncInverseRefresher``: instead of tolerating
+    a one-cadence staleness window, the rank-k Woodbury path
+    (``repro.solve.smw``) is cheap enough to refresh the inverses inside
+    *every* step's fused program — nothing is ever in flight, nothing is
+    ever stale. What replaces the staleness budget is a *drift* budget:
+    ``smw_step(state, batch) -> (state, metrics)`` carries a probe
+    residual in ``metrics["smw_drift"]`` and when it exceeds
+    ``drift_budget`` the host re-inverts fully through ``refresh_into``
+    — the same donated program the double-buffered path uses, so the
+    fallback costs one allocation rotation, not a new compile.
+
+    Two deliberate asymmetries with the async refresher:
+
+    * the drift readback is one step LAGGED — the scalar dispatched at
+      step N is ``float()``-ed at step N+1, so the host never blocks on
+      the computation it just dispatched (the same async-dispatch
+      overlap the double buffer exists for, bought with one step of
+      fallback latency instead of a whole cadence of staleness);
+    * the FIRST step always falls back: it seeds real inverses over the
+      ``init_inverses`` identities (an SMW update of an identity tracks
+      nothing) and compiles the donated program inside the step-0
+      watchdog warmup window, mirroring the ``spare_buffers`` rationale
+      above.
+
+    ``peek``/``reset`` keep the TrainLoop hook surface of the async
+    refresher so ``launch.train`` can hold either behind one attribute.
+    """
+
+    def __init__(self, smw_step: Callable[[Any, Any], Any],
+                 refresh_into: Callable[[Any, Any], Any],
+                 drift_budget: float):
+        self.smw_step = smw_step
+        self.refresh_into = refresh_into
+        self.drift_budget = float(drift_budget)
+        self._drift: Any = None          # scalar dispatched last step
+        self.n_steps = 0
+        self.n_fallbacks = 0
+        self.last_drift = float("nan")
+
+    def step(self, state, batch):
+        """One training step's refresh: run the fused SMW program, then
+        apply the (lagged) drift gate. Returns ``(state, metrics)``."""
+        state, metrics = self.smw_step(state, batch)
+        fallback = self.n_steps == 0
+        if self._drift is not None:
+            d = float(self._drift)       # blocks on *last* step only
+            self.last_drift = d
+            if not (d <= self.drift_budget):   # NaN drift must trigger
+                fallback = True
+        self._drift = metrics.get("smw_drift")
+        self.n_steps += 1
+        if fallback:
+            kst = state.kfac
+            state = state._replace(kfac=kst._replace(
+                inverses=self.refresh_into(kst.factors, kst.inverses)))
+            self.n_fallbacks += 1
+            # the pending drift was measured on the inverses we just
+            # replaced — reading it next step would re-trigger for free
+            self._drift = None
+        metrics["smw_fallback"] = 1.0 if fallback else 0.0
+        return state, metrics
+
+    def peek(self, kstate):
+        """Nothing is ever in flight on this path; checkpoints see the
+        live state as-is."""
+        return kstate
+
+    def flush(self, kstate):
+        return kstate
+
+    def reset(self) -> None:
+        """Elastic recovery: the restored state's drift scalar is gone;
+        force the next step to fall back (cheap) rather than trust an
+        un-probed inverse tree."""
+        self._drift = None
+        self.n_steps = 0

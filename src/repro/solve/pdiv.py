@@ -1,0 +1,145 @@
+"""Divide-and-conquer inversion of device-oversized factor blocks.
+
+``block_solver`` parallelizes *across* blocks: a device's pool share is
+one or more whole ``bs x bs`` blocks, so a single factor block larger
+than that share serializes on one device. This module splits such a
+block *internally* — the 2-way recursive block-Schur identity
+
+    D = [[A11, A12], [A21, A22]],  damping folded up front (D = F + lam I)
+
+    X11 = A11^-1            X22 = A22^-1          (stage 1: a pair)
+    S1  = A11 - A12 X22 A21 S2  = A22 - A21 X11 A12   (bridge, replicated)
+    Y1  = S1^-1             Y2  = S2^-1           (stage 2: a pair)
+
+    D^-1 = [[Y1, -X11 A12 Y2], [-X22 A21 Y1, Y2]]
+
+— the symmetric "both-Schur" form, chosen over the classic one-Schur
+factorization because each stage is a *pair of independent same-size
+inversions*, exactly the shape the device-major pool machinery already
+distributes (SINV's ``pdiv_localmap`` recipe applied one level down,
+inside a block). Each half is inverted by the same composed-precision
+``invert_blocks_flat`` primitive as everything else, so the distributed
+run and the local run trace identical per-member programs and agree
+bitwise — the same contract ``block_solver`` pins.
+
+The recursion is hybrid: the top ``depth`` levels run their stage pairs
+under ``shard_map`` (devices beyond the pair invert an identity pad,
+mirroring ``_pool_group``); deeper levels recurse locally per device.
+``depth=1`` covers a block 2x one device's share; each extra level
+doubles that.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core.kfac import KFACConfig, invert_blocks_flat
+from repro.dist.api import mesh_axes, mesh_ndev
+
+__all__ = ["pdiv_invert"]
+
+
+def _mm(a: jax.Array, b: jax.Array) -> jax.Array:
+    return jnp.einsum("ab,bc->ac", a, b,
+                      preferred_element_type=jnp.float32)
+
+
+def _base_inverse(d: jax.Array, cfg: KFACConfig) -> jax.Array:
+    """Leaf of the recursion: one composed-precision inversion.
+
+    Damping is already folded into ``d``, so the primitive runs with a
+    zero Tikhonov shift — keeping it the *same* traced computation on
+    every path is what makes local-vs-distributed bitwise."""
+    return invert_blocks_flat(d[None], jnp.zeros((1,), d.dtype), cfg)[0]
+
+
+def _schur_level(d: jax.Array, cfg: KFACConfig, depth: int,
+                 run_pair: Callable) -> jax.Array:
+    """One block-Schur level; ``run_pair((p, q), depth-1)`` inverts two
+    independent equal-size halves (locally or under shard_map)."""
+    n = d.shape[-1]
+    if n % 2:
+        raise ValueError(
+            f"pdiv needs an even block size to split, got {n}; factor "
+            "blocks from soi.block_size_for are powers of two")
+    h = n // 2
+    a11, a12 = d[:h, :h], d[:h, h:]
+    a21, a22 = d[h:, :h], d[h:, h:]
+    x11, x22 = run_pair((a11, a22), depth - 1)
+    u12 = _mm(x11, a12)
+    u21 = _mm(x22, a21)
+    s1 = a11 - _mm(a12, u21)
+    s2 = a22 - _mm(a21, u12)
+    y1, y2 = run_pair((s1, s2), depth - 1)
+    b12 = -_mm(u12, y2)
+    b21 = -_mm(u21, y1)
+    return jnp.concatenate([
+        jnp.concatenate([y1, b12], axis=-1),
+        jnp.concatenate([b21, y2], axis=-1),
+    ], axis=-2)
+
+
+def _pdiv_local(d: jax.Array, cfg: KFACConfig, depth: int) -> jax.Array:
+    if depth <= 0:
+        return _base_inverse(d, cfg)
+
+    def run_pair(pair: Tuple[jax.Array, jax.Array], dep: int):
+        return tuple(_pdiv_local(p, cfg, dep) for p in pair)
+
+    return _schur_level(d, cfg, depth, run_pair)
+
+
+def _dist_pair_runner(cfg: KFACConfig, mesh) -> Callable:
+    """Stage runner that spreads a pair's two inversions over the mesh.
+
+    The pair is pooled device-major exactly like ``_pool_group``: device
+    0 owns member 0, device 1 owns member 1, every further device gets
+    an identity pad so all devices trace the same work. The gathered
+    pool carries NO sharding hint — the forced-host SPMD partitioner
+    miscompiles constraints on gathered pools (see CHANGES.md, PR 4).
+    """
+    axes = mesh_axes(mesh)
+    ndev = mesh_ndev(mesh)
+
+    def run_pair(pair: Tuple[jax.Array, jax.Array], dep: int):
+        eye = jnp.eye(pair[0].shape[-1], dtype=pair[0].dtype)
+        ext = jnp.stack([pair[0], pair[1], eye])
+        idx = np.minimum(np.arange(ndev), 2)    # static: pads -> eye
+        pooled = ext[idx]                       # (ndev, h, h)
+
+        def body(b):
+            # local shard (1, h, h): invert this device's member with
+            # the same local recursion every other path uses
+            inv = _pdiv_local(b[0], cfg, dep)[None]
+            return jax.lax.all_gather(inv, axis_name=axes, tiled=True)
+
+        gathered = jax.shard_map(
+            body, mesh=mesh, in_specs=(P(axes),),
+            out_specs=P(), check_vma=False)(pooled)
+        return gathered[0], gathered[1]
+
+    return run_pair
+
+
+def pdiv_invert(block: jax.Array, lam, cfg: KFACConfig, *,
+                depth: int = 1, mesh=None) -> jax.Array:
+    """Invert one damped ``(n, n)`` factor block by recursive block-Schur.
+
+    ``lam`` is the Tikhonov shift (scalar), folded up front so every
+    sub-problem is a plain SPD inversion. With a ``mesh`` the top
+    ``depth`` levels distribute their stage pairs across devices and the
+    result is bitwise identical to the local ``mesh=None`` run; with
+    ``depth=0`` this degenerates to a single ``invert_blocks_flat``
+    call. ``depth=1`` suits a block 2x one device's pool share.
+    """
+    n = block.shape[-1]
+    d = block.astype(jnp.float32) + \
+        jnp.asarray(lam, jnp.float32) * jnp.eye(n, dtype=jnp.float32)
+    if mesh is None or mesh_ndev(mesh) <= 1 or depth <= 0:
+        return _pdiv_local(d, cfg, depth)
+    return _schur_level(d, cfg, depth, _dist_pair_runner(cfg, mesh))

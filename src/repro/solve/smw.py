@@ -1,0 +1,184 @@
+"""Incremental SOI: Sherman-Morrison-Woodbury rank-k inverse refresh.
+
+RePAST amortizes its SOI updates over 10 batches because a full
+O(bs^3) re-inversion per step is unaffordable even for the INV
+crossbars; PANTHER (arXiv:1912.11516) shows the hardware form of the
+cheaper alternative — crossbar weights reprogrammed as rank-k outer
+products instead of full rewrites. The software image: each step's
+factor EMA
+
+    F' = d * F + (1 - d) * w * V^T V     (rank k = subsample tokens)
+
+is inverted *incrementally* from the cached inverse, honoring the EMA
+decay exactly — decay-scale the inverse, then rank-k correct:
+
+    M      = sym(F_inv) / d
+    F'^-1 ~= M - (V M)^T (I/c + V M V^T)^-1 (V M),   c = (1 - d) * w
+
+at O(k * bs^2) per block instead of O(bs^3), cheap enough to run every
+step — the preconditioner never sees a stale inverse (the double-
+buffered async path trades a full inv-cadence staleness window for its
+overlap; this path needs neither).
+
+Two exactness gaps are *monitored* rather than corrected:
+
+* the cached inverse is of the **damped** factor (``soi.
+  tikhonov_damping``: ``lam = rel * tr/bs``) and the tracked damping
+  decays as ``d^n * lam_0`` while the true Tikhonov level follows the
+  trace EMA;
+* when the token count exceeds ``SMWConfig.rank`` the columns are a
+  strided, rescaled subsample (the Gram contribution becomes an
+  estimator).
+
+A deterministic-probe residual ``||Ahat (M v) - v||`` (O(bs^2) per
+block, computed inside the same program) upper-bounds neither gap
+tightly but *grows* with both; the host-side ``SMWRefresher``
+(``repro.solve.async_refresh``) reads it one step lagged and falls back
+to a full re-inversion — through the same donated buffered program the
+async path uses — whenever it exceeds ``drift_budget``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import soi
+from repro.core.kfac import KFACConfig
+
+__all__ = ["SMWConfig", "smw_refresh", "smw_update_flat", "probe_drift"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SMWConfig:
+    """Knobs of the incremental refresh.
+
+    ``drift_budget``: probe-residual level above which the host falls
+    back to a full re-inversion. ``rank``: max columns per update —
+    token sets larger than this are strided down (rescaled by
+    ``sqrt(k/rank)`` so the Gram estimate is unbiased over strides).
+    ``use_kernel``: route the per-block update through the Pallas
+    ``kernels.smw_update`` program (hi/lo bit-sliced VMMs) instead of
+    the fp32 einsum path — allclose, not bitwise, like the other
+    kernel opt-ins."""
+
+    drift_budget: float = 0.05
+    rank: int = 64
+    use_kernel: bool = False
+
+
+def _subsample_cols(v: jax.Array, rank: int) -> jax.Array:
+    """(..., k, bs) -> (..., rank, bs) strided subsample, rescaled so
+    ``V_sub^T V_sub ~= V^T V`` in expectation over stride phases."""
+    k = v.shape[-2]
+    if rank <= 0 or k <= rank:
+        return v
+    idx = np.arange(rank) * (k // rank)
+    return v[..., idx, :] * np.sqrt(k / rank).astype(np.float32)
+
+
+def smw_update_flat(inv: jax.Array, v: jax.Array, decay: float,
+                    c: float, *, use_kernel: bool = False) -> jax.Array:
+    """Woodbury rank-k update of a flat batch of cached inverses.
+
+    ``inv``: (N, bs, bs) inverses of the previous damped factors;
+    ``v``: (N, k, bs) columns with Gram contribution ``c/(1-d) * V^T V``
+    per block (``c`` already folds the side weight). The inverse is
+    symmetrized before the decay-scale so one VMM (``y = V M``) serves
+    both Woodbury wings — the cached inverse is symmetric up to the
+    composed scheme's iteration noise, which the drift probe absorbs.
+    """
+    if use_kernel:
+        from repro.kernels import ops as kernel_ops
+
+        return kernel_ops.smw_update(inv, v, decay=decay, cscale=c)
+    k = v.shape[-2]
+    m = (inv + jnp.swapaxes(inv, -1, -2)) * jnp.float32(0.5 / decay)
+    y = jnp.einsum("nkb,nbc->nkc", v, m,
+                   preferred_element_type=jnp.float32)
+    s = jnp.einsum("nkb,nlb->nkl", y, v,
+                   preferred_element_type=jnp.float32) \
+        + jnp.eye(k, dtype=jnp.float32) / jnp.float32(c)
+    z = jnp.linalg.solve(s, y)
+    return m - jnp.einsum("nka,nkb->nab", y, z,
+                          preferred_element_type=jnp.float32)
+
+
+def _probes(bs: int) -> jax.Array:
+    """Two deterministic unit probes: uniform and alternating-sign."""
+    scale = np.float32(1.0 / np.sqrt(bs))
+    ones = jnp.full((bs,), scale, jnp.float32)
+    alt = jnp.where(jnp.arange(bs) % 2 == 0, scale, -scale)
+    return jnp.stack([ones, alt.astype(jnp.float32)])
+
+
+def probe_drift(factors: Mapping[str, Mapping[str, Any]],
+                inverses: Mapping[str, Mapping[str, Any]],
+                cfg: KFACConfig) -> jax.Array:
+    """Max probe residual ``||Ahat (M v) - v||`` over every block.
+
+    ``Ahat`` is the *currently true* damped factor (trace-EMA Tikhonov
+    level included), so the estimate sees both the rank-k approximation
+    error and the decayed-damping gap. O(bs^2) per block — cheap enough
+    to ride every SMW step."""
+    worst = jnp.zeros((), jnp.float32)
+    for name, f_d in factors.items():
+        inv_d = inverses.get(name, {})
+        for side, f in f_d.items():
+            inv = inv_d.get(side + "_inv")
+            if inv is None:
+                continue
+            lam = soi.tikhonov_damping(f, cfg.damping)
+            v = _probes(f.shape[-1])                   # (p, bs)
+            w = jnp.einsum("...bc,pc->...pb", inv, v,
+                           preferred_element_type=jnp.float32)
+            u = jnp.einsum("...bc,...pc->...pb", f, w,
+                           preferred_element_type=jnp.float32) \
+                + lam[..., None, None] * w
+            r = jnp.sqrt(jnp.sum(jnp.square(u - v), axis=-1))
+            worst = jnp.maximum(worst, jnp.max(r))
+    return worst
+
+
+def smw_refresh(
+    inverses: Mapping[str, Mapping[str, Any]],
+    factors: Mapping[str, Mapping[str, Any]],
+    cols: Mapping[str, Mapping[str, Any]],
+    cfg: KFACConfig,
+    scfg: Optional[SMWConfig] = None,
+) -> Tuple[dict, jax.Array]:
+    """Rank-k-update every cached inverse; returns ``(inverses, drift)``.
+
+    ``factors`` must already hold this step's EMA (``kfac.
+    update_factors``); ``cols[name][side]`` are the (*stack, nb, k, bs)
+    column factors of the *same* contribution (``kfac.stats_rank_k``),
+    with the weight convention ``w = 1/k`` for A (token-mean Gram) and
+    ``w = 1`` for G (Fisher sum over tokens). Leaves without a cols
+    entry keep their inverse untouched — their growing error is exactly
+    what the returned drift scalar reports."""
+    scfg = scfg or SMWConfig()
+    d = cfg.ema_decay
+    new_inv: dict = {}
+    for name, inv_d in inverses.items():
+        c_d = cols.get(name, {}) if cols else {}
+        nd = {}
+        for key, inv in inv_d.items():
+            side = key[:-4]                            # strip "_inv"
+            v = c_d.get(side)
+            if v is None:
+                nd[key] = inv
+                continue
+            w = 1.0 / v.shape[-2] if side == "A" else 1.0
+            v = _subsample_cols(v, scfg.rank)
+            bs = inv.shape[-1]
+            flat = inv.reshape((-1, bs, bs))
+            vf = v.reshape((-1,) + v.shape[-2:])
+            upd = smw_update_flat(flat, vf, d, (1.0 - d) * w,
+                                  use_kernel=scfg.use_kernel)
+            nd[key] = upd.reshape(inv.shape)
+        new_inv[name] = nd
+    return new_inv, probe_drift(factors, new_inv, cfg)

@@ -23,7 +23,7 @@ from repro.configs import get_smoke_config
 from repro.core import kfac
 from repro.core.kfac import KFACConfig
 from repro.launch import steps as steps_mod
-from repro.solve import invert_factor_tree, make_plan
+from repro.solve import invert_factor_tree, make_plan, pdiv_invert
 
 KCFG = KFACConfig(block_size=32, ns_iters=6, taylor_terms=2,
                   refine_steps=1)
@@ -137,6 +137,34 @@ def test_dist_refresh_shrinks_per_device_work_2x2():
     else:
         bound = sum(-(-g.n_blocks // 4) for g in plan.groups)
     assert plan.max_device_blocks <= bound
+
+
+@pytest.mark.multidevice
+@pytest.mark.parametrize("mesh_shape", [(2, 2), (4, 1)])
+def test_pdiv_oversized_block_bitwise(mesh_shape):
+    """Divide-and-conquer inversion of a factor block 2x one device's
+    pool share: the mesh-distributed recursion is bitwise identical to
+    the single-device run of the same schedule (acceptance criterion —
+    the sub-inversions are the same programs either way, only their
+    placement differs)."""
+    mesh = _mesh(mesh_shape)
+    r = np.random.default_rng(11)
+    n = 128                       # 2x a 64-wide device pool share
+    a = r.standard_normal((n, 2 * n)).astype(np.float32)
+    blk = jnp.asarray(a @ a.T / (2 * n))
+    lam = 0.03
+
+    local = jax.jit(
+        lambda b: pdiv_invert(b, lam, KCFG, depth=1))(blk)
+    with jax.set_mesh(mesh):
+        dist = jax.jit(
+            lambda b: pdiv_invert(b, lam, KCFG, depth=1,
+                                  mesh=mesh))(blk)
+    np.testing.assert_array_equal(np.asarray(local), np.asarray(dist))
+    # and the schedule is a real inverse of the damped block
+    res = np.asarray(
+        (blk + lam * jnp.eye(n)) @ local - jnp.eye(n))
+    assert float(np.max(np.abs(res))) < 0.3
 
 
 @pytest.mark.skipif(jax.device_count() >= 4,
