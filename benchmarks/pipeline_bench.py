@@ -166,6 +166,27 @@ out["refresh_overlap"] = {
     "overlap_ratio": round(us_both / (us_ref + us_step), 3),
 }
 
+# -- 4D: the same 1f1b step on a (stage, data, model) mesh -------------
+# (model=2 slices the attention/MLP weights inside each stage; the
+# tick grid is unchanged, so the bubble fraction measures whether the
+# in-stage TP collectives add stall ticks to the lowered program)
+mesh4 = make_pipeline_mesh(PP, model=2)
+part4 = partition_stages(cfg, PP)
+sched4 = make_schedule("1f1b", PP, M)
+with jax.set_mesh(mesh4):
+    gf4 = jax.jit(make_pipeline_grads_fn(cfg, part4, sched4, mesh4))
+    (loss4, _), us4 = timed(gf4, params, micro, n=7)
+rel4 = abs(float(loss2) - float(loss4)) / abs(float(loss2))
+assert rel4 < 1e-3, ("4d", float(loss2), float(loss4))
+out["4d"] = {
+    "mesh": dict(zip(mesh4.axis_names,
+                     [int(s) for s in mesh4.devices.shape])),
+    "wall_ms": round(us4 / 1e3, 3),
+    "measured_bubble": round(
+        float((sched4.op == 0).sum() / sched4.op.size), 4),
+    "loss_rel_diff_vs_pp_only": rel4,
+}
+
 mb = out["1f1b"]["measured_bubble"]
 an = out["analytic_bubble"]
 out["bubble_within_2x"] = (mb is not None
@@ -190,6 +211,18 @@ def rows(result=None):
             "wall_fit_bubble": r["wall_fit_bubble"],
             "peak_stash": "/".join(str(x) for x in r["peak_stash"]),
         })
+    d4 = d["4d"]
+    out.append({
+        "schedule": "1f1b@4d",
+        "n_stages": d["n_stages"],
+        "n_micro": d["n_micro"],
+        "wall_ms": d4["wall_ms"],
+        "measured_bubble": d4["measured_bubble"],
+        "analytic_bubble": round(d["analytic_bubble"], 4),
+        "wall_fit_bubble": "",
+        "peak_stash": "x".join(
+            f"{k}{v}" for k, v in d4["mesh"].items()),
+    })
     ov = d["refresh_overlap"]
     out.append({
         "schedule": "1f1b+soi_refresh",

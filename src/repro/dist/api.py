@@ -24,6 +24,7 @@ Contract (consumed by models/*, core/soi, core/kfac, launch/steps):
 from __future__ import annotations
 
 import contextlib
+import functools
 import math
 from typing import Any, Optional, Tuple
 
@@ -43,13 +44,14 @@ MODEL = "model"
 #: microbatch, offset in time by the schedule (repro.pipeline).
 BATCH_AXES: Tuple[str, ...] = (POD, DATA)
 
-# Depth counter for :func:`hint_guard` regions (tracing is synchronous,
-# so a plain module counter is race-free).
+# Depth counter + bound-axes stack for :func:`hint_guard` regions
+# (tracing is synchronous, so plain module state is race-free).
 _HINTS_OFF = 0
+_BOUND_AXES: list = []
 
 
 @contextlib.contextmanager
-def hint_guard():
+def hint_guard(axes=None):
     """Disable :func:`shard_hint` inside the ``with`` body.
 
     Inside a ``shard_map`` region every mesh axis is *manual*, and a
@@ -58,21 +60,109 @@ def hint_guard():
     (``repro.pipeline.schedule``) traces the per-stage model body under
     this guard: there the shard_map program itself is the layout, so
     hints degrade to identity exactly like they do with no mesh active.
+
+    ``axes`` optionally records the mesh-axis sizes bound by the
+    enclosing shard_map (``{"stage": S, "data": dp, "model": mp}``).
+    Model code queries them via :func:`bound_axes` to decide whether a
+    manual collective over e.g. the ``model`` axis is legal — that is
+    how tensor-parallel psums and EP dispatch run *inside* the stage
+    program instead of falling back to portable paths.
     """
     global _HINTS_OFF
     _HINTS_OFF += 1
+    _BOUND_AXES.append(dict(axes) if axes else {})
     try:
         yield
     finally:
         _HINTS_OFF -= 1
+        _BOUND_AXES.pop()
 
 
 def in_hint_guard() -> bool:
     """True while tracing inside a :func:`hint_guard` (manual shard_map)
     region — model code that would open nested shard_maps or emit
-    sharding constraints (e.g. the MoE expert-parallel fast path) must
-    take its portable path instead."""
+    sharding constraints must detour: either issue manual collectives
+    over :func:`bound_axes` or take its portable path."""
     return bool(_HINTS_OFF)
+
+
+def bound_axes() -> dict:
+    """Axis sizes bound by the innermost :func:`hint_guard` region
+    (empty outside a guard, or when the guard recorded none)."""
+    return dict(_BOUND_AXES[-1]) if _BOUND_AXES else {}
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def _fwd_psum(x, axis):
+    return jax.lax.psum(x, axis)
+
+
+def _fwd_psum_fwd(x, axis):
+    return jax.lax.psum(x, axis), None
+
+
+def _fwd_psum_bwd(axis, _, ct):
+    # The summed output is replicated, so its cotangent is too; each
+    # shard's partial contributes with coefficient 1 -> identity. (A raw
+    # lax.psum would transpose to another psum under check_vma=False,
+    # scaling the backward by the axis size.)
+    return (ct,)
+
+
+_fwd_psum.defvjp(_fwd_psum_fwd, _fwd_psum_bwd)
+
+
+def fwd_psum(x: Any, axis: str) -> Any:
+    """Unconditional ``lax.psum`` with identity backward, for code that
+    always runs with ``axis`` bound (e.g. bodies of an explicit
+    shard_map). See :func:`psum_if_bound` for the guarded variant."""
+    return _fwd_psum(x, axis)
+
+
+def psum_if_bound(x: Any, axis: str) -> Any:
+    """``lax.psum(x, axis)`` iff tracing inside a :func:`hint_guard`
+    region that bound ``axis`` with size > 1; identity otherwise —
+    megatron's ``g`` operator (reduce forward, identity backward).
+
+    This is the reduction seam for tensor-parallel partial sums in
+    model code that runs both under GSPMD (where the compiler inserts
+    the reduction from sharding constraints) and inside the manual
+    pipeline stage program (where the model must reduce explicitly)."""
+    if _HINTS_OFF and _BOUND_AXES and _BOUND_AXES[-1].get(axis, 1) > 1:
+        return _fwd_psum(x, axis)
+    return x
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def _bwd_psum(x, axis):
+    return x
+
+
+def _bwd_psum_fwd(x, axis):
+    del axis
+    return x, None
+
+
+def _bwd_psum_bwd(axis, _, ct):
+    return (jax.lax.psum(ct, axis),)
+
+
+_bwd_psum.defvjp(_bwd_psum_fwd, _bwd_psum_bwd)
+
+
+def bwd_psum_if_bound(x: Any, axis: str) -> Any:
+    """Identity in the forward whose COTANGENT is psummed over ``axis``
+    — megatron's conjugate ``f`` operator — active only inside a
+    :func:`hint_guard` region that bound ``axis`` with size > 1.
+
+    Insert where a replicated activation fans into model-sliced weights
+    (column-parallel q/k/v or gate/up projections): each shard's
+    backward produces only its slice's contribution to the input
+    cotangent, and this operator reduces those partials back to the
+    true gradient before they reach the shared upstream graph."""
+    if _HINTS_OFF and _BOUND_AXES and _BOUND_AXES[-1].get(axis, 1) > 1:
+        return _bwd_psum(x, axis)
+    return x
 
 
 def _norm_entry(entry) -> Tuple[str, ...]:

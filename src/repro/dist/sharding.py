@@ -68,7 +68,11 @@ def _param_pspec(name: str, ndim: int) -> Tuple[Optional[str], ...]:
     base = name.rsplit("/", 1)[-1]
 
     def staged(spec: Tuple[Optional[str], ...]):
-        if name.startswith("layers/") and ndim >= 2 and spec[0] is None:
+        # every scanned stack rides the stage axis: the uniform decoder
+        # stack, the hybrid pattern-unit stack, and whisper's enc/dec
+        # stacks (non-uniform partitions pad per stage — repro.pipeline)
+        stacked = name.startswith(("layers/", "units/", "enc/", "dec/"))
+        if stacked and ndim >= 2 and spec[0] is None:
             return (STAGE,) + spec[1:]
         return spec
 

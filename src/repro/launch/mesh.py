@@ -22,8 +22,18 @@ from __future__ import annotations
 import jax
 
 
-def make_production_mesh(*, multi_pod: bool = False, pp: int = 1):
-    shape = (2, 16, 16) if multi_pod else (16, 16)
+def make_production_mesh(*, multi_pod: bool = False, pp: int = 1,
+                         model: int = 16):
+    """The full (pod, stage, data, model) layout on 256/512 chips.
+
+    ``model`` resizes the inner TP axis (freed chips widen ``data``);
+    ``pp`` splits the data axis into (stage, data). Defaults reproduce
+    the classic (16, 16) / (2, 16, 16) pods."""
+    if 256 % model:
+        raise ValueError(f"model={model} does not divide the 256-chip "
+                         f"pod slice")
+    shape = (2, 256 // model, model) if multi_pod \
+        else (256 // model, model)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     if pp > 1:
         d = shape[-2]
@@ -49,9 +59,9 @@ def make_pipeline_mesh(pp: int, model: int = 1):
     """Largest (stage, data, model) mesh on the local device pool.
 
     ``stage`` is the pipeline axis consumed by ``repro.pipeline``'s
-    shard_map program; the leftover devices data-parallel the
-    microbatch rows. Pipeline + model parallelism is not composed yet
-    (make_pipeline_step enforces model == 1)."""
+    shard_map program; ``model`` is the in-stage megatron-TP / EP axis
+    (the stage program slices eligible weights over it); the leftover
+    devices data-parallel the microbatch rows."""
     n = jax.device_count()
     if pp < 1:
         raise ValueError(f"pp must be >= 1, got {pp}")

@@ -237,7 +237,10 @@ def make_pipeline_step(cfg: ModelConfig, kcfg: KFACConfig, *,
     if mesh is None:
         raise ValueError("pp > 1 needs a mesh with a 'stage' axis "
                          "(launch.mesh.make_pipeline_mesh)")
-    part = pipeline.partition_stages(cfg, pp, require_uniform=True)
+    # free (cost-balanced) partition: the executor handles non-uniform
+    # atom counts via static padding + masks; uniform counts keep the
+    # unpadded bitwise path automatically
+    part = pipeline.partition_stages(cfg, pp)
     m = n_micro or max(cfg.train_accum, pp)
     if isinstance(schedule, pipeline.Schedule):
         sched = schedule
@@ -366,8 +369,8 @@ def make_smw_step(cfg: ModelConfig, kcfg: KFACConfig,
 
 def make_inv_refresh(cfg: ModelConfig, kcfg: KFACConfig, *,
                      mesh=None, distributed: bool = False,
-                     abstract_state: Optional[TrainState] = None
-                     ) -> Callable:
+                     abstract_state: Optional[TrainState] = None,
+                     pdiv_cap_bs: Optional[int] = None) -> Callable:
     """Inverse-refresh fn ``factors -> inverses`` for this (arch, kcfg).
 
     ``distributed=True`` on a multi-device mesh routes through the
@@ -375,7 +378,11 @@ def make_inv_refresh(cfg: ModelConfig, kcfg: KFACConfig, *,
     once from the abstract factor shapes, and each device inverts only
     its owned ~1/ndev of the blocks under shard_map. Otherwise the
     replicated path runs (bitwise-identical per block on the default
-    composed method).
+    composed method). ``pdiv_cap_bs`` (distributed only) diverts factor
+    leaves whose block size exceeds the cap into the plan's pdiv
+    sub-schedule — each oversized block is inverted by recursive
+    block-Schur (``solve.pdiv_invert``) with its stage pairs spread
+    over the mesh instead of serializing one device.
 
     Operating on the factor subtree (not the whole TrainState) is what
     lets the async refresher dispatch it as an independent computation
@@ -385,7 +392,8 @@ def make_inv_refresh(cfg: ModelConfig, kcfg: KFACConfig, *,
     plan = None
     if distributed and mesh is not None and mesh_ndev(mesh) > 1:
         ab = abstract_state or abstract_train_state(cfg, kcfg)
-        plan = make_plan(ab.kfac.factors, mesh_ndev(mesh), kcfg)
+        plan = make_plan(ab.kfac.factors, mesh_ndev(mesh), kcfg,
+                         pdiv_cap_bs=pdiv_cap_bs)
 
     def refresh(factors):
         return invert_factor_tree(factors, kcfg, mesh=mesh, plan=plan)

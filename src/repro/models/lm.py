@@ -26,7 +26,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.soi import LinearSpec
-from repro.dist.api import BATCH_AXES, MODEL, shard_hint
+from repro.dist.api import (
+    BATCH_AXES,
+    MODEL,
+    bwd_psum_if_bound,
+    psum_if_bound,
+    shard_hint,
+)
 from repro.models import moe as moe_mod
 from repro.models import rglru as rglru_mod
 from repro.models import ssm as ssm_mod
@@ -165,15 +171,25 @@ def _attn_block(cfg, p, x, positions, ctx, prefix, *, window=0,
     B, T, D = x.shape
     h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
     xin = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if p["attn"]["wq"].shape[-1] < h * hd:
+        # model-sliced q/k/v ahead: reduce the partial input-cotangents
+        # the slices produce back to the true gradient (megatron `f`)
+        xin = bwd_psum_if_bound(xin, MODEL)
     q = dense(xin, p["attn"]["wq"], f"{prefix}/attn/wq", ctx,
               bias=p["attn"].get("bq"))
     k = dense(xin, p["attn"]["wk"], f"{prefix}/attn/wk", ctx,
               bias=p["attn"].get("bk"), collect_gram=False)
     v = dense(xin, p["attn"]["wv"], f"{prefix}/attn/wv", ctx,
               bias=p["attn"].get("bv"), collect_gram=False)
-    q = q.reshape(B, T, h, hd)
-    k = k.reshape(B, T, kv, hd)
-    v = v.reshape(B, T, kv, hd)
+    # Head counts are inferred from the projection outputs, not cfg:
+    # inside the manual (pipeline × model) stage program the weights
+    # arrive pre-sliced over the model axis (megatron column-parallel),
+    # so each shard sees h_loc = h/mp query heads. Under GSPMD or with
+    # model=1 the shapes are full and h_loc == h.
+    h_loc, kv_loc = q.shape[-1] // hd, k.shape[-1] // hd
+    q = q.reshape(B, T, h_loc, hd)
+    k = k.reshape(B, T, kv_loc, hd)
+    v = v.reshape(B, T, kv_loc, hd)
     sections = cfg.mrope_sections if mrope else ()
     q = apply_rope(q, positions, cfg.rope_theta, sections)
     k = apply_rope(k, positions, cfg.rope_theta, sections)
@@ -209,19 +225,28 @@ def _attn_block(cfg, p, x, positions, ctx, prefix, *, window=0,
     out = attention(q, k_all, v_all, q_pos, kv_pos, causal=True,
                     window=window,
                     chunk=cfg.attn_chunk if T > cfg.attn_chunk else 0)
-    out = out.reshape(B, T, h * hd)
+    out = out.reshape(B, T, h_loc * hd)
     out = dense(out, p["attn"]["wo"], f"{prefix}/attn/wo", ctx)
+    if h_loc < h:
+        # row-parallel wo on a head slice: each model shard holds a
+        # partial sum of the output projection
+        out = psum_if_bound(out, MODEL)
     return x + shard_acts(out), new_cache
 
 
 def _mlp_block(cfg, p, x, ctx, prefix):
     xin = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if p["mlp"]["wg"].shape[-1] < cfg.d_ff:
+        xin = bwd_psum_if_bound(xin, MODEL)
     g = dense(xin, p["mlp"]["wg"], f"{prefix}/mlp/wg", ctx)
     u = dense(xin, p["mlp"]["wu"], f"{prefix}/mlp/wu", ctx,
               collect_gram=False)
+    f_loc = g.shape[-1]           # < d_ff when wg/wu arrive model-sliced
     hidden = swiglu(g, u)
     hidden = shard_hint(hidden, BATCH_AXES, None, MODEL)
     out = dense(hidden, p["mlp"]["wd"], f"{prefix}/mlp/wd", ctx)
+    if f_loc < cfg.d_ff:
+        out = psum_if_bound(out, MODEL)
     return x + shard_acts(out)
 
 
@@ -449,29 +474,65 @@ def embed_inputs(cfg, params, batch, positions):
     return _embed(cfg, params, batch, positions)
 
 
-def stage_slice_forward(cfg, layer_stack, x, positions, *, train=True):
-    """Run a contiguous slice of the uniform scanned decoder stack —
-    the per-stage body of the pipeline executor.
+def stage_slice_forward(cfg, layer_stack, x, positions, *, train=True,
+                        valid=None):
+    """Run a contiguous slice of the scanned decoder stack — the
+    per-stage body of the pipeline executor.
 
     ``layer_stack`` is the ``params["layers"]`` subtree restricted to
-    this stage's ``(K, ...)`` layers (the ``stage``-sharded slice).
+    this stage's ``(K, ...)`` layers (the ``stage``-sharded slice) —
+    or, for the hybrid family, the ``params["units"]`` subtree sliced
+    to ``(K, ...)`` pattern units. ``valid`` is an optional ``(K,)``
+    bool mask for non-uniform partitions: stages padded to the max
+    slice length skip their padding entries via ``jnp.where`` (padding
+    duplicates a real layer, so both branches stay finite and the
+    discarded branch contributes exactly-zero parameter gradients).
     Train-mode only: no KV caches, no stats taps (the SU graph runs as
     its own amortized program), per-layer remat as in :func:`forward`.
     """
-    if cfg.family in ("hybrid", "audio"):
+    if cfg.family == "audio":
         raise NotImplementedError(
-            f"stage_slice_forward covers the uniform scanned families "
-            f"(dense/vlm/moe/ssm), not {cfg.family!r}")
-    kind = layer_plan(cfg)[0]
+            "audio stacks pipeline through whisper.stage_slice_forward")
+    if cfg.family == "hybrid":
+        def body(xcur, xs):
+            p_u, ok = xs
+            ctx = Ctx(taps=None, collect=False, soi_block=cfg.soi_block)
+            xnew = xcur
+            for i, kind in enumerate(cfg.pattern):
+                xnew, _ = _layer_apply(cfg, kind, p_u[f"sub{i}"], xnew,
+                                       positions, ctx, f"units/sub{i}",
+                                       cache=None, idx=None)
+            if ok is not None:
+                xnew = jnp.where(ok, xnew, xcur)
+            return xnew, None
+    else:
+        kind = layer_plan(cfg)[0]
 
-    def body(xcur, p_l):
-        ctx = Ctx(taps=None, collect=False, soi_block=cfg.soi_block)
-        xnew, _ = _layer_apply(cfg, kind, p_l, xcur, positions, ctx,
-                               "layers", cache=None, idx=None)
-        return xnew, None
+        def body(xcur, xs):
+            p_l, ok = xs
+            ctx = Ctx(taps=None, collect=False, soi_block=cfg.soi_block)
+            xnew, _ = _layer_apply(cfg, kind, p_l, xcur, positions, ctx,
+                                   "layers", cache=None, idx=None)
+            if ok is not None:
+                xnew = jnp.where(ok, xnew, xcur)
+            return xnew, None
 
     fn = jax.checkpoint(body) if (train and cfg.remat) else body
-    x, _ = jax.lax.scan(fn, x, layer_stack)
+    x, _ = jax.lax.scan(fn, x, (layer_stack, valid))
+    return x
+
+
+def tail_forward(cfg, params, x, positions):
+    """Hybrid-family pipelined tail: the ``n_layers % len(pattern)``
+    trailing sub-layers that don't fill a pattern unit. Runs on the
+    last stage (tail params are stage-replicated; the stage psum on
+    their gradients collects the last stage's contribution)."""
+    _, tail = _hybrid_split(cfg)
+    ctx = Ctx(taps=None, collect=False, soi_block=cfg.soi_block)
+    for i, kind in enumerate(tail):
+        x, _ = _layer_apply(cfg, kind, params["tail"][f"sub{i}"], x,
+                            positions, ctx, f"tail/sub{i}",
+                            cache=None, idx=None)
     return x
 
 

@@ -31,7 +31,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.dist.api import BATCH_AXES, MODEL, shard_hint
+from repro.dist.api import BATCH_AXES, MODEL, fwd_psum, shard_hint
 from repro.models.layers import Ctx, cast, dense_stacked, swiglu
 
 
@@ -106,7 +106,11 @@ def _local_moe(cfg, xf, router, wg, wu, wd, *, c_loc: int):
     gathered = y[jnp.clip(flat_lid, 0, e_loc - 1), safe_pos]
     w = (gate.reshape(-1) * keep.astype(jnp.float32)).astype(dt)
     out = jnp.zeros((nt_loc, D), dt).at[tok].add(gathered * w[:, None])
-    return jax.lax.psum(out, MODEL)
+    # fwd_psum, not raw lax.psum: each shard contributes its local
+    # experts' outputs with coefficient 1, so the backward is identity
+    # on the replicated cotangent (raw psum would transpose to psum
+    # under check_vma=False and scale grads by the axis size)
+    return fwd_psum(out, MODEL)
 
 
 def _moe_fast(cfg, p, xf, prefix):
@@ -144,7 +148,9 @@ def _use_fast_path(cfg, ctx, prefix) -> bool:
     if in_hint_guard():
         # already inside a manual (shard_map) region — the pipeline
         # stage program — where a nested shard_map over mesh axes is
-        # illegal; the portable einsum path computes the same routing
+        # illegal. EP still runs there: moe_ffn dispatches straight to
+        # _local_moe over the pre-bound axes when the expert weights
+        # arrive model-sliced (see moe_ffn); otherwise portable.
         return False
     if ctx is not None and ctx.collect:
         return False
@@ -169,6 +175,35 @@ def moe_ffn(cfg, p: Dict, x: jax.Array, ctx: Optional[Ctx],
 
     if _use_fast_path(cfg, ctx, prefix):
         out = _moe_fast(cfg, p, xf, prefix)
+        return out.reshape(B, T, D)
+
+    # --- EP-in-stage: inside the manual pipeline program the expert
+    # weights arrive pre-sliced over the bound ``model`` axis, so the
+    # shard_map fast-path body runs *directly* (its collectives —
+    # axis_index + closing psum — are legal on pre-bound axes; only a
+    # nested shard_map would not be). With data > 1 each shard routes
+    # its own token slice against a per-device capacity share, exactly
+    # as _moe_fast does from the outside. ---
+    from repro.dist.api import bound_axes, bwd_psum_if_bound, \
+        in_hint_guard
+    if in_hint_guard() and p["wg"].shape[0] < E:
+        ax = bound_axes()
+        if ax.get(MODEL, 1) <= 1:
+            raise ValueError(
+                f"{prefix}: expert dim arrived sliced "
+                f"({p['wg'].shape[0]} < {E}) but no bound '{MODEL}' "
+                f"axis to dispatch over")
+        n_data = 1
+        for a in BATCH_AXES:
+            n_data *= ax.get(a, 1)
+        c_loc = max(-(-capacity(cfg, nt * n_data) // n_data), 8)
+        # each shard's backward only sees its local experts' pull on
+        # the inputs/router — reduce those partial cotangents (the
+        # outer shard_map did this automatically for _moe_fast)
+        xf = bwd_psum_if_bound(xf, MODEL)
+        router = bwd_psum_if_bound(p["router"], MODEL)
+        out = _local_moe(cfg, xf, router, p["wg"], p["wu"],
+                         p["wd"], c_loc=c_loc)
         return out.reshape(B, T, D)
 
     # --- routing (router stays on the first-order path) ---

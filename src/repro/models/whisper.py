@@ -178,6 +178,39 @@ def _mha_kv(cfg, p, xkv, ctx, prefix):
     return k.reshape(B, -1, h, hd), v.reshape(B, -1, h, hd)
 
 
+def _head_logits(cfg, params, x):
+    """Tied vocab head on post-``dec_ln_f`` activations.
+
+    The vocab is padded to a shardable multiple of 128 (whisper's
+    51865 is not 16-divisible => unsharded logits dominate HBM
+    otherwise); padded columns are masked so loss/argmax are
+    unchanged."""
+    dt = x.dtype
+    head = params["embed"].T
+    v = head.shape[-1]
+    vpad = (-v) % 128
+    if vpad:
+        head = jnp.pad(head, ((0, 0), (0, vpad)))
+    logits = jax.lax.dot_general(
+        x, cast(head, dt), (((2,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    if vpad:
+        logits = logits + jnp.where(jnp.arange(v + vpad) < v, 0.0,
+                                    -1e30)
+    return shard_hint(logits, BATCH_AXES, None, MODEL)
+
+
+def loss_from_logits(cfg, logits, batch):
+    """Teacher-forced CE over decoder tokens — the tail shared by the
+    monolithic :func:`loss_fn` and the pipeline's last stage."""
+    del cfg
+    labels = batch["tokens"][:, 1:]
+    lg = logits[:, :-1].astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(lg, axis=-1)
+    gold = jnp.take_along_axis(lg, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
 def decode(cfg, params, tokens, enc_out, taps=None, collect=False,
            cache=None, last_only=False, last_pos=None):
     """Decoder pass. tokens: (B, T). Returns (logits, stats, new_cache).
@@ -237,21 +270,7 @@ def decode(cfg, params, tokens, enc_out, taps=None, collect=False,
     elif last_pos is not None:
         x = jnp.take_along_axis(
             x, last_pos[:, None, None].astype(jnp.int32), axis=1)
-    # vocab padded to a shardable multiple of 128 (whisper's 51865 is
-    # not 16-divisible => unsharded logits dominate HBM otherwise);
-    # padded columns masked so loss/argmax are unchanged
-    head = params["embed"].T
-    v = head.shape[-1]
-    vpad = (-v) % 128
-    if vpad:
-        head = jnp.pad(head, ((0, 0), (0, vpad)))
-    logits = jax.lax.dot_general(
-        x, cast(head, dt), (((2,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)
-    if vpad:
-        logits = logits + jnp.where(jnp.arange(v + vpad) < v, 0.0,
-                                    -1e30)
-    logits = shard_hint(logits, BATCH_AXES, None, MODEL)
+    logits = _head_logits(cfg, params, x)
     new_cache = None
     if cache is not None:
         new_cache = {
@@ -268,13 +287,120 @@ def loss_fn(cfg, params, batch, taps=None, collect=False):
                               taps=taps, collect=collect)
     logits, stats_d, _ = decode(cfg, params, batch["tokens"], enc_out,
                                 taps=taps, collect=collect)
-    labels = batch["tokens"][:, 1:]
-    lg = logits[:, :-1].astype(jnp.float32)
-    logz = jax.scipy.special.logsumexp(lg, axis=-1)
-    gold = jnp.take_along_axis(lg, labels[..., None], axis=-1)[..., 0]
-    loss = jnp.mean(logz - gold)
+    loss = loss_from_logits(cfg, logits, batch)
     stats = {**stats_e, **stats_d}
     return loss, stats
+
+
+# ---------------------------------------------------------------------------
+# Per-stage slices (pipeline parallelism, repro.pipeline)
+# ---------------------------------------------------------------------------
+#
+# The pipeline channel for the enc-dec stack is the CONCATENATION
+# [enc_seg | dec_seg] along time, width T_enc + T_dec: encoder layers
+# live on leading stages and decoder layers on trailing ones (the
+# contiguous stage partition over [enc..., dec...] atoms pins them
+# there), and the concatenated channel carries both the final encoder
+# output forward to every decoder stage *and* the encoder cotangents
+# backward — no extra cross-stage traffic beyond the one channel
+# ppermute per tick. A stage that runs decoder layers recomputes
+# ``enc_out = layer_norm(enc_seg, enc_ln_f)`` locally (enc_ln_f is
+# stage-replicated); by partition contiguity the enc segment is final
+# on every such stage.
+
+
+def stage_channel_init(cfg, params, batch):
+    """Stage-0 front of the pipelined forward: both frontends — frame
+    embeddings + sinusoid for the encoder segment, token embedding +
+    sinusoid for the decoder segment — concatenated along time."""
+    tokens = batch["tokens"]
+    B, T_dec = tokens.shape
+    D = cfg.d_model
+    dt = jnp.dtype(cfg.dtype)
+    enc = batch["enc_embeds"]
+    T_enc = enc.shape[1]
+    epos = jnp.broadcast_to(jnp.arange(T_enc, dtype=jnp.int32),
+                            (B, T_enc))
+    enc_x = (enc.astype(jnp.float32) + _sinusoid(epos, D)).astype(dt)
+    dpos = jnp.broadcast_to(jnp.arange(T_dec, dtype=jnp.int32),
+                            (B, T_dec))
+    dec_x = (cast(params["embed"], dt)[tokens].astype(jnp.float32)
+             + _sinusoid(dpos, D)).astype(dt)
+    return jnp.concatenate([enc_x, dec_x], axis=1)
+
+
+def stage_slice_forward(cfg, params, ch, t_enc, *, enc_valid=None,
+                        dec_valid=None, train=True):
+    """Per-stage body of the pipelined enc-dec forward.
+
+    ``params["enc"]``/``params["dec"]`` arrive as this stage's padded
+    ``(Ke, ...)``/``(Kd, ...)`` slices; ``enc_valid``/``dec_valid``
+    (bool ``(Ke,)``/``(Kd,)``) mask the padding entries (duplicates of
+    real layers, so the discarded branch stays finite and its parameter
+    gradients are exactly zero). Train-mode only."""
+    B = ch.shape[0]
+    enc_seg, dec_seg = ch[:, :t_enc], ch[:, t_enc:]
+    T_dec = dec_seg.shape[1]
+    epos = jnp.broadcast_to(jnp.arange(t_enc, dtype=jnp.int32),
+                            (B, t_enc))
+    dpos = jnp.broadcast_to(jnp.arange(T_dec, dtype=jnp.int32),
+                            (B, T_dec))
+
+    def ebody(xc, xs):
+        p_l, ok = xs
+        ctx = Ctx(taps=None, collect=False, soi_block=cfg.soi_block)
+        h, _ = _mha(cfg, p_l["attn"],
+                    layer_norm(xc, p_l["ln1"]["w"], p_l["ln1"]["b"]),
+                    None, ctx, "enc/attn", False, epos, epos)
+        xn = xc + h
+        xn = xn + _mlp(cfg, p_l["mlp"],
+                       layer_norm(xn, p_l["ln2"]["w"], p_l["ln2"]["b"]),
+                       ctx, "enc/mlp")
+        if ok is not None:
+            xn = jnp.where(ok, xn, xc)
+        return xn, None
+
+    efn = jax.checkpoint(ebody) if (train and cfg.remat) else ebody
+    enc_seg, _ = jax.lax.scan(efn, enc_seg, (params["enc"], enc_valid))
+
+    # final by contiguity on every stage whose dec slice has a valid
+    # entry; on pure-encoder stages the dec scan is fully masked and
+    # this value (and its zero cotangent) is dead
+    enc_out = layer_norm(enc_seg, params["enc_ln_f"]["w"],
+                         params["enc_ln_f"]["b"])
+
+    def dbody(xc, xs):
+        p_l, ok = xs
+        ctx = Ctx(taps=None, collect=False, soi_block=cfg.soi_block)
+        h, _ = _mha(cfg, p_l["attn"],
+                    layer_norm(xc, p_l["ln1"]["w"], p_l["ln1"]["b"]),
+                    None, ctx, "dec/attn", True, dpos, dpos)
+        xn = xc + h
+        xq = layer_norm(xn, p_l["lnx"]["w"], p_l["lnx"]["b"])
+        kv = _mha_kv(cfg, p_l["cross"], enc_out, ctx, "dec/cross")
+        h, _ = _mha(cfg, p_l["cross"], xq, None, ctx, "dec/cross",
+                    False, dpos, epos, shared_kv=kv)
+        xn = xn + h
+        xn = xn + _mlp(cfg, p_l["mlp"],
+                       layer_norm(xn, p_l["ln2"]["w"], p_l["ln2"]["b"]),
+                       ctx, "dec/mlp")
+        if ok is not None:
+            xn = jnp.where(ok, xn, xc)
+        return xn, None
+
+    dfn = jax.checkpoint(dbody) if (train and cfg.remat) else dbody
+    dec_seg, _ = jax.lax.scan(dfn, dec_seg, (params["dec"], dec_valid))
+    return jnp.concatenate([enc_seg, dec_seg], axis=1)
+
+
+def head_loss(cfg, params, ch, batch):
+    """Last-stage tail of the pipelined forward: dec final norm + tied
+    vocab head + :func:`loss_from_logits` on the decoder segment of the
+    channel — the identical math :func:`loss_fn` runs after decode."""
+    t_enc = batch["enc_embeds"].shape[1]
+    x = ch[:, t_enc:]
+    x = layer_norm(x, params["dec_ln_f"]["w"], params["dec_ln_f"]["b"])
+    return loss_from_logits(cfg, _head_logits(cfg, params, x), batch)
 
 
 # ---------------------------------------------------------------------------

@@ -7,13 +7,19 @@ the mesh image of that execution model — a ``stage`` axis over which
 the layer stack is partitioned, with microbatches flowing through a
 static schedule:
 
-  stages      host-side balanced contiguous partition of the block
-              stack (cost-model DP; embedding/head pinned to the
-              first/last stage)
+  stages      host-side balanced contiguous partition of the *atom*
+              stack — layers, hybrid pattern units (ragged tail on the
+              last stage), or whisper enc/dec layers — by exact
+              min-max DP; embedding/head pinned to the first/last
+              stage
   schedule    GPipe and 1F1B tick grids built host-side, lowered into
               ONE shard_map program (lax.scan over ticks, 3-way switch
               per tick, ppermute activation/cotangent transfers,
-              remat-style backward from stashed stage inputs)
+              remat-style backward from stashed stage inputs). The
+              stage program composes the full (pod, stage, data,
+              model) mesh: eligible weights enter pre-sliced over
+              ``model`` (megatron TP + MoE experts, EP-in-stage) and
+              non-uniform partitions execute via padding + masks
   microbatch  the (n_micro, mb, ...) batch splitter, shared with
               gradient accumulation (launch/steps)
   stash       static slot allocation for the activation stashes +

@@ -38,21 +38,36 @@ def stage_specs(specs: Mapping[str, LinearSpec],
                 part: StagePartition) -> Tuple[Dict[str, LinearSpec], ...]:
     """Per-stage restriction of the K-FAC spec registry.
 
-    Every scanned-stack spec (``layers/...`` with leading stack dim L)
-    appears in each stage with its stack dim cut to that stage's layer
-    count — the shapes of the stage-resident factor slices. Non-stacked
-    specs would belong to un-pipelined families and are rejected
-    upstream (``stages.partition_stages``).
+    Every scanned-stack spec (``layers/``, hybrid ``units/``, whisper
+    ``enc/``/``dec/`` — leading stack dim = atom count) appears in
+    each owning stage with its stack dim cut to that stage's atom
+    count — the shapes of the stage-resident factor slices; stages
+    owning zero atoms of a stack (a pure-encoder stage's ``dec/``
+    specs) skip it. Hybrid ``tail/`` specs are unstacked and pinned to
+    the last stage, where the executor runs the ragged tail sublayers.
     """
     out = []
     for s in range(part.n_stages):
-        k = len(part.layers_of(s))
+        if part.atom == "encdec":
+            ne, nd = part.enc_dec_counts(s)
+            counts = {"enc": ne, "dec": nd}
+        else:
+            counts = {"layers": len(part.layers_of(s)),
+                      "units": len(part.layers_of(s))}
         d = {}
         for name, spec in specs.items():
-            if not name.startswith("layers/"):
+            stack_key = name.split("/", 1)[0]
+            if stack_key == "tail":
+                if s == part.n_stages - 1:
+                    d[name] = spec
+                continue
+            if stack_key not in counts:
                 raise ValueError(
-                    f"spec {name!r} is not part of the scanned layer "
+                    f"spec {name!r} is not part of a scanned atom "
                     f"stack; this family cannot be stage-partitioned")
+            k = counts[stack_key]
+            if k == 0:
+                continue
             d[name] = dataclasses.replace(
                 spec, stack=(k,) + spec.stack[1:])
         out.append(d)

@@ -19,7 +19,16 @@ receive ring).  The executor then lowers the grid into ONE jitted
   is exactly one activation tensor per in-flight microbatch, the bound
   :class:`repro.pipeline.stash.StashPlan` documents;
 * the loss and the shared (embedding/head) gradients leave the region
-  ``psum``-ed over ``stage``; per-stage layer gradients stay sharded.
+  ``psum``-ed over ``stage``; per-stage layer gradients stay sharded;
+* the ``model`` mesh axis composes *inside* the stage program:
+  eligible weights get per-weight model-axis in_specs (megatron TP /
+  expert slicing), the model code reduces the resulting partial sums
+  with manual psums over the bound axis, and MoE layers dispatch EP
+  over their local expert slice — one program, 4D mesh
+  ``(pod, stage, data, model)``;
+* non-uniform stage partitions (hybrid pattern units, whisper's
+  enc-dec split) run via static padding of the atom stacks + bool
+  masks; uniform partitions keep the unpadded bitwise path.
 
 Schedule shapes (both synchronous — the weight update applies after the
 drain, which is what keeps a pipelined step numerically a gradient-
@@ -44,7 +53,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.dist.api import STAGE, path_key
+from repro.dist.api import MODEL, STAGE, path_key
 from repro.pipeline.stages import StagePartition
 from repro.pipeline.stash import SlotAllocator, StashPlan, WeightStash
 
@@ -287,18 +296,127 @@ def make_schedule(kind: str, n_stages: int, n_micro: int) -> Schedule:
 # shard_map lowering
 # ---------------------------------------------------------------------------
 
-def _is_stage_sharded(path: str) -> bool:
-    """Leaves whose leading dim is the scanned layer stack — sharded
-    over the ``stage`` axis (the per-stage parameter slice)."""
-    return path.startswith("layers/")
+def _stage_stack_keys(cfg) -> Tuple[str, ...]:
+    """Top-level param keys whose leading dim is a stage-partitioned
+    atom stack (see :class:`repro.pipeline.stages.StagePartition`)."""
+    if cfg.family == "audio":
+        return ("enc", "dec")
+    if cfg.family == "hybrid":
+        return ("units",)
+    return ("layers",)
 
 
-def _param_specs(params) -> dict:
+def _is_stage_sharded(path: str, stage_keys: Tuple[str, ...]) -> bool:
+    """Leaves whose leading dim is a scanned atom stack — sharded over
+    the ``stage`` axis (the per-stage parameter slice)."""
+    return path.startswith(tuple(k + "/" for k in stage_keys))
+
+
+def _model_spec_dim(cfg, path: str, ndim: int, mp: int):
+    """Dim index carrying the megatron ``model`` axis for this leaf, or
+    None (replicated).
+
+    The rules mirror ``dist/sharding.py`` but are *gated on exact
+    divisibility* — inside the manual region there is no GSPMD to
+    degrade gracefully, so a non-divisible dim must stay replicated:
+
+    * attention q/k/v columns + o rows shard only when BOTH the query
+      and the kv head counts divide ``mp`` (q/k/v must slice together
+      or the per-shard attention would mix sharded q with replicated
+      kv and leave partial weight gradients);
+    * MLP gate/up columns + down rows shard when ``d_ff % mp == 0``;
+    * MoE experts slice on the expert dim when ``n_experts % mp == 0``
+      (EP-in-stage dispatch; the router stays replicated);
+    * whisper stays fully replicated under TP: its row-parallel denses
+      carry biases added inside the matmul's output, which the closing
+      psum would double-count;
+    * everything else (norms, embeddings, ssm/rglru mixers, head) is
+      replicated.
+    """
+    if mp <= 1 or cfg.family == "audio":
+        return None
+    parts = path.split("/")
+    name = parts[-1]
+    if "moe" in parts:
+        if name in ("wg", "wu", "wd") and cfg.n_experts % mp == 0:
+            return ndim - 3
+        return None
+    if "attn" in parts:
+        ok = cfg.n_heads % mp == 0 and cfg.n_kv_heads % mp == 0
+        if not ok:
+            return None
+        if name in ("wq", "wk", "wv", "bq", "bk", "bv"):
+            return ndim - 1
+        if name == "wo":
+            return ndim - 2
+        return None
+    if "mlp" in parts and cfg.d_ff % mp == 0:
+        if name in ("wg", "wu"):
+            return ndim - 1
+        if name == "wd":
+            return ndim - 2
+    return None
+
+
+def _param_specs(params, cfg, mp, stage_keys) -> dict:
     def one(path, leaf):
-        del leaf
-        return P(STAGE) if _is_stage_sharded(path_key(path)) else P()
+        pk = path_key(path)
+        spec = [None] * leaf.ndim
+        if _is_stage_sharded(pk, stage_keys):
+            spec[0] = STAGE
+        md = _model_spec_dim(cfg, pk, leaf.ndim, mp)
+        if md is not None:
+            spec[md] = MODEL
+        return P(*spec)
 
     return jax.tree_util.tree_map_with_path(one, params)
+
+
+def _pad_plan(counts, starts):
+    """Static pack/unpack maps for a non-uniform atom stack.
+
+    Returns ``(gather_idx (S*K,), valid (S*K,), unpack_idx (n,))``
+    with ``K = max(counts)``: stage ``s``'s packed slice holds its real
+    atoms ``starts[s]..starts[s]+counts[s]-1`` followed by padding that
+    *duplicates* a real atom (so every branch of the executor's
+    ``jnp.where`` masking stays finite) flagged False in ``valid``.
+    Restacked to ``(S*K, ...)`` the pack slices equally over ``stage``;
+    ``unpack_idx[l]`` locates original atom ``l``'s gradient in the
+    packed gradient stack (padding grads are exactly zero, so the
+    gather loses nothing).
+    """
+    S, K = len(counts), max(counts)
+    gather, valid = [], []
+    unpack = np.zeros(sum(counts), np.int64)
+    for s in range(S):
+        fill = starts[s] if counts[s] else 0
+        for j in range(K):
+            if j < counts[s]:
+                gather.append(starts[s] + j)
+                valid.append(True)
+                unpack[starts[s] + j] = s * K + j
+            else:
+                gather.append(fill)
+                valid.append(False)
+    return (np.asarray(gather, np.int64), np.asarray(valid, bool),
+            unpack)
+
+
+def _pack_plans(part: StagePartition, cfg) -> dict:
+    """Per-stack-key pad plans; empty when the partition is uniform
+    (the fast path: stacks slice bitwise, no padding, no masks)."""
+    if part.uniform:
+        return {}
+    if part.atom == "encdec":
+        ne = [part.enc_dec_counts(s)[0] for s in range(part.n_stages)]
+        nd = [part.enc_dec_counts(s)[1] for s in range(part.n_stages)]
+        e_starts = np.concatenate([[0], np.cumsum(ne)[:-1]])
+        d_starts = np.concatenate([[0], np.cumsum(nd)[:-1]])
+        return {"enc": _pad_plan(ne, list(e_starts)),
+                "dec": _pad_plan(nd, list(d_starts))}
+    key = _stage_stack_keys(cfg)[0]
+    return {key: _pad_plan(list(part.layer_counts()),
+                           list(part.boundaries[:-1]))}
 
 
 def _micro_specs(micro, batch_axes) -> dict:
@@ -323,31 +441,39 @@ def make_pipeline_grads_fn(cfg, part: StagePartition, sched: Schedule,
     ``(loss, grads)`` match the gradient-accumulation semantics of
     ``launch/steps.make_train_step``: mean-of-microbatch losses, and
     gradients averaged 1/M per microbatch in microbatch order.
+
+    The program composes the full 4D mesh: ``stage`` sequences the
+    pipeline, the batch axes (``pod``/``data``) shard microbatches,
+    and ``model`` runs megatron TP / expert parallelism *inside* each
+    stage — per-weight model-axis in_specs (:func:`_model_spec_dim`)
+    slice the eligible weights, the model code's ``psum_if_bound`` /
+    ``bwd_psum_if_bound`` seams reduce the partial sums over the bound
+    axis, and MoE layers dispatch EP over their expert slice
+    (``moe_ffn``'s in-stage branch). Non-uniform partitions run via
+    static padding + masking (:func:`_pad_plan`); uniform ones keep
+    the unpadded bitwise path.
     """
     from repro.dist.api import hint_guard
-    from repro.models import lm
+    from repro.models import lm, whisper
 
     S, M = sched.n_stages, sched.n_micro
     if part.n_stages != S:
         raise ValueError(f"partition has {part.n_stages} stages, "
                          f"schedule has {S}")
-    if not part.uniform:
-        raise ValueError(
-            f"SPMD executor needs equal layers per stage, got "
-            f"{part.layer_counts()}")
     sizes = dict(mesh.shape)
     if sizes.get(STAGE) != S:
         raise ValueError(
             f"mesh axis 'stage' is {sizes.get(STAGE)}, schedule wants "
             f"{S}; build the mesh with launch.mesh.make_pipeline_mesh")
-    if sizes.get("model", 1) != 1:
-        raise NotImplementedError(
-            "pipeline + model parallelism is not composed yet (the "
-            "stage program would need model-axis specs per weight); "
-            "run with model=1 on the pipeline mesh")
+    mp = sizes.get(MODEL, 1)
+    stage_keys = _stage_stack_keys(cfg)
+    pack = _pack_plans(part, cfg)
+    masks = {k: jnp.asarray(v[1]) for k, v in pack.items()}
     batch_axes = tuple(a for a in ("pod", "data") if a in sizes)
     act_dtype = jnp.dtype(cfg.dtype)
     D = cfg.d_model
+    audio = cfg.family == "audio"
+    hybrid = cfg.family == "hybrid"
     inv_m = 1.0 / M
 
     # static schedule arrays -> device constants, one row per tick
@@ -360,11 +486,13 @@ def make_pipeline_grads_fn(cfg, part: StagePartition, sched: Schedule,
     rcap = sched.stash_plan.recv_cap + 1      # +1: scratch slot for -1
     gcap = sched.stash_plan.grad_cap + 1
 
-    def body(params, micro):
+    def body(params, micro, vmask):
         sid = jax.lax.axis_index(STAGE)
         is_first = sid == 0
         is_last = sid == S - 1
         mb_local, T = micro["tokens"].shape[1:3]
+        t_enc = micro["enc_embeds"].shape[2] if audio else 0
+        T += t_enc          # audio: channel = [enc_seg | dec_seg]
         zeros_act = jnp.zeros((mb_local, T, D), act_dtype)
 
         def take_micro(i):
@@ -372,25 +500,49 @@ def make_pipeline_grads_fn(cfg, part: StagePartition, sched: Schedule,
                 lambda v: jax.lax.dynamic_index_in_dim(
                     v, i, 0, keepdims=False), micro)
 
-        def stage_forward(p, x_in, mbd):
+        def get_pos(mbd):
             if "positions" in mbd:
-                pos = mbd["positions"]
-            else:
-                b, t = mbd["tokens"].shape
-                pos = jnp.broadcast_to(
-                    jnp.arange(t, dtype=jnp.int32)[None], (b, t))
-            # only stage 0 runs the embedding (and, in the backward,
-            # its scatter-add into the vocab table) — like the head,
-            # a real branch, not a masked always-on compute
+                return mbd["positions"]
+            b, t = mbd["tokens"].shape
+            return jnp.broadcast_to(
+                jnp.arange(t, dtype=jnp.int32)[None], (b, t))
+
+        def stage_forward(p, x_in, mbd):
+            # only stage 0 runs the frontend (and, in the backward, its
+            # scatter-add into the vocab table) — like the head, a real
+            # branch, not a masked always-on compute
+            if audio:
+                x0 = jax.lax.cond(
+                    is_first,
+                    lambda ops: whisper.stage_channel_init(
+                        cfg, p, ops[0]).astype(act_dtype),
+                    lambda ops: ops[1].astype(act_dtype),
+                    (mbd, x_in))
+                return whisper.stage_slice_forward(
+                    cfg, p, x0, t_enc, enc_valid=vmask.get("enc"),
+                    dec_valid=vmask.get("dec"), train=True)
+            pos = get_pos(mbd)
             x0 = jax.lax.cond(
                 is_first,
                 lambda ops: lm.embed_inputs(
                     cfg, p, ops[0], pos).astype(act_dtype),
                 lambda ops: ops[1].astype(act_dtype),
                 (mbd, x_in))
-            y = lm.stage_slice_forward(cfg, p["layers"], x0, pos,
-                                       train=True)
+            stack = p["units"] if hybrid else p["layers"]
+            y = lm.stage_slice_forward(cfg, stack, x0, pos, train=True,
+                                       valid=vmask.get(stage_keys[0]))
             return y
+
+        def head_fn(p, mbd):
+            """Last-stage tail: (hybrid ragged sublayers +) final norm
+            + vocab head + loss — per family."""
+            if audio:
+                return lambda yy: whisper.head_loss(cfg, p, yy, mbd)
+            if hybrid:
+                return lambda yy: lm.head_loss(
+                    cfg, p, lm.tail_forward(cfg, p, yy, get_pos(mbd)),
+                    mbd)
+            return lambda yy: lm.head_loss(cfg, p, yy, mbd)
 
         def objective(p, x_in, dy, mbd):
             """Scalar whose (p, x_in)-gradient is this stage's BWD:
@@ -399,7 +551,7 @@ def make_pipeline_grads_fn(cfg, part: StagePartition, sched: Schedule,
             y = stage_forward(p, x_in, mbd)
             loss_mb = jax.lax.cond(
                 is_last,
-                lambda yy: lm.head_loss(cfg, p, yy, mbd),
+                head_fn(p, mbd),
                 lambda yy: jnp.zeros((), jnp.float32),
                 y)
             carry = jnp.sum(y.astype(jnp.float32)
@@ -477,7 +629,14 @@ def make_pipeline_grads_fn(cfg, part: StagePartition, sched: Schedule,
         loss = jax.lax.psum(loss_acc, STAGE)
 
         def reduce_grad(path, g):
-            if not _is_stage_sharded(path_key(path)):
+            # stage-stacked grads stay sharded over `stage`; everything
+            # else (embed/head/norms/tail) is stage-replicated and the
+            # psum collects each stage's (often zero) contribution.
+            # No `model` collective: replicated-param grads are already
+            # identical across model shards (the bwd_psum seams reduce
+            # the partial cotangents *before* they reach shared
+            # weights) and model-sliced grads stay local slices.
+            if not _is_stage_sharded(path_key(path), stage_keys):
                 g = jax.lax.psum(g, STAGE)
             if batch_axes:
                 g = jax.lax.pmean(g, batch_axes)
@@ -489,16 +648,30 @@ def make_pipeline_grads_fn(cfg, part: StagePartition, sched: Schedule,
         return loss, grads
 
     def pipeline_grads(params, micro):
+        # non-uniform partitions: restack each atom stack to the padded
+        # (S * K_max, ...) layout so P(stage) slices it equally
+        p_run = dict(params)
+        for k, (gidx, _, _) in pack.items():
+            p_run[k] = jax.tree.map(lambda v, g=gidx: v[g], params[k])
+        pspecs = _param_specs(p_run, cfg, mp, stage_keys)
         mapped = jax.shard_map(
             body, mesh=mesh,
-            in_specs=(_param_specs(params), _micro_specs(micro,
-                                                         batch_axes)),
-            out_specs=(P(), _param_specs(params)),
+            in_specs=(pspecs, _micro_specs(micro, batch_axes),
+                      {k: P(STAGE) for k in masks}),
+            out_specs=(P(), pspecs),
             check_vma=False)
         # model/dist shard_hints are illegal inside the manual region;
         # the stage program IS the layout, so hints no-op under the
-        # guard (tracing happens synchronously within this call)
-        with hint_guard():
-            return mapped(params, micro)
+        # guard, which also records the bound axis sizes the model
+        # code's manual collectives (TP psums, EP dispatch) key on
+        # (tracing happens synchronously within this call)
+        with hint_guard(axes=sizes):
+            loss, grads = mapped(p_run, micro, masks)
+        # gather each original atom's gradient back out of the packed
+        # stacks (padding slots carry exactly-zero grads)
+        grads = dict(grads)
+        for k, (_, _, uidx) in pack.items():
+            grads[k] = jax.tree.map(lambda v, u=uidx: v[u], grads[k])
+        return loss, grads
 
     return pipeline_grads

@@ -8,7 +8,11 @@ a per-layer FLOP cost model (the same cost-driven assignment idiom as
 ``solve/partition.make_plan``'s greedy-LPT — pipeline stages must stay
 *contiguous*, so the balancing is a min-max boundary DP rather than
 free LPT placement), with the embedding pinned to the first stage and
-the vocab head pinned to the last.
+the vocab head pinned to the last.  The partition unit is the family's
+*atom*: a layer for the uniform scanned stacks, a pattern unit for
+hybrid, and the concatenated encoder+decoder layer sequence for
+whisper (contiguity pins encoders to leading stages, decoders to
+trailing ones).
 
 Everything is computed from the config's abstract shapes — no
 allocation, no tracing — and the resulting :class:`StagePartition` is
@@ -28,7 +32,9 @@ from repro.configs.base import ModelConfig
 
 def layer_flops(cfg: ModelConfig, kind: str) -> float:
     """Per-token forward matmul FLOPs of one decoder layer of ``kind``
-    (the relative weight the balancer needs; constants cancel)."""
+    (the relative weight the balancer needs; constants cancel).
+    ``enc``/``dec`` are the whisper encoder/decoder layers (ungated
+    2-matmul MLP; the decoder adds the cross-attention)."""
     d, f = cfg.d_model, cfg.d_ff
     h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
     attn = 2.0 * (d * h * hd + 2 * d * kv * hd + h * hd * d)
@@ -43,6 +49,10 @@ def layer_flops(cfg: ModelConfig, kind: str) -> float:
     if kind == "rec":
         lw = cfg.lru_width_
         return 2.0 * (2 * d * lw + 2 * lw * lw + lw * d) + mlp
+    if kind == "enc":
+        return attn + 2.0 * 2 * d * f
+    if kind == "dec":
+        return 2 * attn + 2.0 * 2 * d * f
     raise ValueError(kind)
 
 
@@ -61,16 +71,26 @@ def head_flops(cfg: ModelConfig) -> float:
 
 @dataclasses.dataclass(frozen=True)
 class StagePartition:
-    """Contiguous layer ranges per stage, with per-stage balanced cost.
+    """Contiguous *atom* ranges per stage, with per-stage balanced cost.
 
-    ``boundaries``: length ``n_stages + 1``; stage ``s`` owns layers
+    The atom depends on the family — ``"layer"`` for the uniform
+    scanned decoder stacks, ``"unit"`` for the hybrid pattern unit
+    (``len(cfg.pattern)`` sublayers cut atomically so the scanned unit
+    stack slices cleanly), ``"encdec"`` for whisper, where the atom
+    sequence is the concatenation ``[enc_0..enc_{Ne-1}, dec_0...]`` —
+    contiguity then automatically pins encoder layers to the leading
+    stages and decoder layers to the trailing ones.
+
+    ``boundaries``: length ``n_stages + 1``; stage ``s`` owns atoms
     ``[boundaries[s], boundaries[s+1])``.  ``costs`` includes the
-    embed/head pins on the first/last stage.
+    embed/head pins on the first/last stage (and the hybrid tail).
     """
 
     n_stages: int
     boundaries: Tuple[int, ...]
     costs: Tuple[float, ...]
+    atom: str = "layer"
+    n_enc_atoms: int = 0
 
     @property
     def n_layers(self) -> int:
@@ -83,10 +103,21 @@ class StagePartition:
         return tuple(self.boundaries[s + 1] - self.boundaries[s]
                      for s in range(self.n_stages))
 
+    def enc_dec_counts(self, s: int) -> Tuple[int, int]:
+        """(encoder, decoder) atom counts of stage ``s`` (audio only)."""
+        a, b = self.boundaries[s], self.boundaries[s + 1]
+        ne = max(0, min(b, self.n_enc_atoms) - min(a, self.n_enc_atoms))
+        return ne, (b - a) - ne
+
     @property
     def uniform(self) -> bool:
-        """Equal layer counts per stage — required by the SPMD executor
-        (all devices run the same stage program on their slice)."""
+        """Equal atom counts per stage — the fast path of the SPMD
+        executor (stage stacks slice bitwise over the ``stage`` axis
+        with no padding/masking). Whisper never counts as uniform:
+        even with equal totals the enc/dec split differs per stage,
+        so its stacks always take the padded+masked path."""
+        if self.atom == "encdec":
+            return False
         return len(set(self.layer_counts())) == 1
 
     @property
@@ -95,14 +126,19 @@ class StagePartition:
         return max(self.costs) / (sum(self.costs) / len(self.costs))
 
     def summary(self) -> dict:
-        return {
+        out = {
             "n_stages": self.n_stages,
+            "atom": self.atom,
             "boundaries": list(self.boundaries),
-            "layer_counts": list(self.layer_counts()),
+            "atom_counts": list(self.layer_counts()),
             "stage_gflops_per_token": [round(c / 1e9, 4)
                                        for c in self.costs],
             "imbalance": round(self.imbalance, 4),
         }
+        if self.atom == "encdec":
+            out["enc_dec_counts"] = [list(self.enc_dec_counts(s))
+                                     for s in range(self.n_stages)]
+        return out
 
 
 def _min_max_boundaries(costs: np.ndarray, n_stages: int,
@@ -145,54 +181,75 @@ def _min_max_boundaries(costs: np.ndarray, n_stages: int,
     return tuple(reversed(bounds))
 
 
-def partition_stages(cfg: ModelConfig, n_stages: int,
-                     *, require_uniform: bool = False) -> StagePartition:
-    """Balanced contiguous stage partition of ``cfg``'s layer stack.
+def _atom_costs(cfg: ModelConfig) -> Tuple[np.ndarray, str, int, float]:
+    """(per-atom costs, atom kind, n_enc_atoms, extra last-stage cost).
 
-    Built from abstract shapes only.  ``require_uniform`` restricts the
-    cut points to equal layer counts per stage (the SPMD executor's
-    constraint: every device runs the same stage program on its slice)
-    and raises a clear error when ``n_layers % n_stages != 0``; the
-    free min-max DP otherwise places boundaries wherever the cost model
-    says (e.g. one layer fewer on the head-pinned last stage).
+    * dense/vlm/moe/ssm — atom = one layer.
+    * hybrid — atom = one pattern unit (the scanned unit stack can only
+      slice at unit boundaries); the ragged tail sublayers run on the
+      last stage alongside the head, so their cost joins ``last_extra``.
+    * audio — atoms = all encoder layers then all decoder layers; a
+      contiguous cut over that sequence is exactly the enc-leading /
+      dec-trailing placement the channel layout needs.
     """
     from repro.models.lm import layer_plan        # deferred: no cycle
 
     if cfg.family == "audio":
-        raise NotImplementedError(
-            "pipeline parallelism covers the uniform scanned decoder "
-            "families (dense/vlm/moe/ssm); the whisper enc-dec stack "
-            "is out of scope (ROADMAP open item)")
-    if n_stages < 1:
-        raise ValueError(f"n_stages must be >= 1, got {n_stages}")
+        costs = np.array(
+            [layer_flops(cfg, "enc")] * cfg.n_enc_layers
+            + [layer_flops(cfg, "dec")] * cfg.n_dec_layers, np.float64)
+        return costs, "encdec", cfg.n_enc_layers, 0.0
     kinds = layer_plan(cfg)
     if cfg.family == "hybrid":
-        raise NotImplementedError(
-            "pipeline parallelism covers the uniform scanned decoder "
-            "families; the hybrid pattern-unit stack is out of scope "
-            "(ROADMAP open item)")
-    if n_stages > cfg.n_layers:
-        raise ValueError(
-            f"{n_stages} stages > {cfg.n_layers} layers ({cfg.name})")
+        unit = tuple(cfg.pattern)
+        n_units = cfg.n_layers // len(unit)
+        unit_cost = sum(layer_flops(cfg, k) for k in unit)
+        tail_cost = sum(layer_flops(cfg, k)
+                        for k in kinds[n_units * len(unit):])
+        return (np.full(n_units, unit_cost, np.float64), "unit", 0,
+                float(tail_cost))
     costs = np.array([layer_flops(cfg, k) for k in kinds], np.float64)
+    return costs, "layer", 0, 0.0
+
+
+def partition_stages(cfg: ModelConfig, n_stages: int,
+                     *, require_uniform: bool = False) -> StagePartition:
+    """Balanced contiguous stage partition of ``cfg``'s atom stack.
+
+    Built from abstract shapes only.  ``require_uniform`` restricts the
+    cut points to equal atom counts per stage and raises a clear error
+    when ``n_atoms % n_stages != 0``; the free min-max DP otherwise
+    places boundaries wherever the cost model says (e.g. one layer
+    fewer on the head-pinned last stage) — the SPMD executor handles
+    the resulting non-uniform stacks by padding + masking.
+    """
+    if n_stages < 1:
+        raise ValueError(f"n_stages must be >= 1, got {n_stages}")
+    costs, atom, n_enc, tail_extra = _atom_costs(cfg)
+    n_atoms = len(costs)
+    if n_stages > n_atoms:
+        raise ValueError(
+            f"{n_stages} stages > {n_atoms} {atom} atoms ({cfg.name})")
+    last_extra = head_flops(cfg) + tail_extra
     if require_uniform:
-        if cfg.n_layers % n_stages:
+        if n_atoms % n_stages:
             raise ValueError(
-                f"SPMD pipeline needs equal layers per stage: "
-                f"{cfg.name} has {cfg.n_layers} layers, not divisible "
-                f"by {n_stages} stages")
-        per = cfg.n_layers // n_stages
+                f"uniform partition needs equal {atom}s per stage: "
+                f"{cfg.name} has {n_atoms}, not divisible by "
+                f"{n_stages} stages")
+        per = n_atoms // n_stages
         bounds = tuple(per * s for s in range(n_stages + 1))
     else:
         bounds = _min_max_boundaries(costs, n_stages, embed_flops(cfg),
-                                     head_flops(cfg))
+                                     last_extra)
     stage_costs = []
     for s in range(n_stages):
         c = float(costs[bounds[s]:bounds[s + 1]].sum())
         if s == 0:
             c += embed_flops(cfg)
         if s == n_stages - 1:
-            c += head_flops(cfg)
+            c += last_extra
         stage_costs.append(c)
     return StagePartition(n_stages=n_stages, boundaries=bounds,
-                          costs=tuple(stage_costs))
+                          costs=tuple(stage_costs), atom=atom,
+                          n_enc_atoms=n_enc)

@@ -44,11 +44,13 @@ from repro.solve.fused_wu import (  # noqa: F401
     refresh_and_precondition,
 )
 from repro.solve.partition import (  # noqa: F401
+    PdivEntry,
     Plan,
     WUPlan,
     inverse_block_flops,
     make_plan,
     make_wu_plan,
+    pdiv_depth,
 )
 from repro.solve.pdiv import pdiv_invert  # noqa: F401
 from repro.solve.smw import (  # noqa: F401

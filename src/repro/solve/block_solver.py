@@ -30,6 +30,7 @@ from repro.core.kfac import KFACConfig, invert_blocks_flat
 from repro.dist.api import mesh_axes, mesh_ndev
 from repro.dist.sharding import solve_pool_sharding
 from repro.solve.partition import Plan
+from repro.solve.pdiv import pdiv_invert
 
 __all__ = ["invert_factor_tree"]
 
@@ -152,4 +153,24 @@ def invert_factor_tree(
     for g, got in zip(plan.groups, gathered):
         for name, d in _scatter_group(factors, g, got).items():
             out.setdefault(name, {}).update(d)
+    for name, d in _run_pdiv(factors, cfg, plan, mesh).items():
+        out.setdefault(name, {}).update(d)
+    return out
+
+
+def _run_pdiv(factors, cfg: KFACConfig, plan: Plan, mesh) -> dict:
+    """Execute the plan's pdiv sub-schedule: leaves whose blocks were
+    too big to pool are inverted one block at a time by recursive
+    block-Schur, each level's stage pairs spread over ``mesh`` (or run
+    locally without one — same traced program, bitwise identical)."""
+    out: dict = {}
+    for entry in plan.pdiv:
+        leaf = factors[entry.name][entry.side]
+        flat, lam = _leaf_flat(leaf, cfg)
+        invs = [pdiv_invert(flat[i], lam[i], cfg, depth=entry.depth,
+                            mesh=mesh)
+                for i in range(flat.shape[0])]
+        stackd = invs[0][None] if len(invs) == 1 else jnp.stack(invs)
+        out.setdefault(entry.name, {})[entry.side + "_inv"] = \
+            stackd.reshape(leaf.shape)
     return out

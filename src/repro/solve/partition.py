@@ -82,6 +82,23 @@ class GroupPlan:
 
 
 @dataclasses.dataclass(frozen=True)
+class PdivEntry:
+    """One factor leaf whose blocks exceed the pool cap.
+
+    The leaf is excluded from the pooled groups; the solver inverts
+    each of its ``(*stack, nb)`` blocks by recursive block-Schur
+    (``solve.pdiv_invert``) at ``depth`` levels, splitting the
+    per-block work into ``2^depth``-size sub-inversions that the
+    stage-pair machinery spreads over the mesh — RePAST's answer to a
+    factor block bigger than one INV crossbar group."""
+
+    name: str
+    side: str
+    bs: int
+    depth: int
+
+
+@dataclasses.dataclass(frozen=True)
 class Plan:
     """Static block->device assignment for one factor-tree geometry."""
 
@@ -89,6 +106,7 @@ class Plan:
     groups: Tuple[GroupPlan, ...]
     device_blocks: Tuple[int, ...]     # real (non-padding) blocks per dev
     device_flops: Tuple[float, ...]
+    pdiv: Tuple[PdivEntry, ...] = ()   # oversized leaves, cap-diverted
 
     @property
     def total_blocks(self) -> int:
@@ -108,11 +126,29 @@ class Plan:
             "groups": [{"bs": g.bs, "n_blocks": g.n_blocks,
                         "per_device": g.per_device}
                        for g in self.groups],
+            "pdiv": [{"leaf": f"{e.name}/{e.side}", "bs": e.bs,
+                      "depth": e.depth} for e in self.pdiv],
         }
 
 
+def pdiv_depth(bs: int, cap: int) -> int:
+    """Smallest split depth bringing a ``bs`` block under ``cap``.
+
+    Each block-Schur level halves the sub-problem size; splitting needs
+    an even size at every level, so the depth is additionally clamped
+    to the 2-adic valuation of ``bs`` (factor blocks from
+    ``soi.block_size_for`` are powers of two, so the clamp only bites
+    on hand-built trees)."""
+    depth = 0
+    while bs > cap and bs % 2 == 0:
+        bs //= 2
+        depth += 1
+    return depth
+
+
 def make_plan(factors: Mapping[str, Mapping[str, Any]], ndev: int,
-              cfg: KFACConfig) -> Plan:
+              cfg: KFACConfig, *,
+              pdiv_cap_bs: int | None = None) -> Plan:
     """Assign every factor block to one of ``ndev`` devices.
 
     ``factors``: ``{name: {"A"|"G": array-or-ShapeDtypeStruct}}`` (the
@@ -123,11 +159,20 @@ def make_plan(factors: Mapping[str, Mapping[str, Any]], ndev: int,
     break on block count, then device index), so equal-cost blocks
     round-robin and the final per-device load differs from optimal by at
     most one block's cost.
+
+    ``pdiv_cap_bs``: block-size pool cap. Leaves whose ``bs`` exceeds
+    it are *not* pooled — one such block would serialize a whole
+    device on O(bs^3) work no matter how the pool is balanced.
+    Instead each oversized leaf becomes a :class:`PdivEntry` in
+    ``Plan.pdiv``: a sub-schedule the solver executes by recursive
+    block-Schur (``solve.pdiv_invert``) at the depth that brings the
+    sub-inversions under the cap. ``None`` (default) pools everything.
     """
     if ndev < 1:
         raise ValueError(f"ndev must be >= 1, got {ndev}")
 
     by_bs: dict = {}
+    pdiv_entries = []
     for name in sorted(factors):
         for side in sorted(factors[name]):
             shape = tuple(factors[name][side].shape)
@@ -136,6 +181,12 @@ def make_plan(factors: Mapping[str, Mapping[str, Any]], ndev: int,
                     f"factor {name}/{side} is not (*stack, nb, bs, bs): "
                     f"{shape}")
             bs = int(shape[-1])
+            if pdiv_cap_bs is not None and bs > pdiv_cap_bs \
+                    and bs % 2 == 0:
+                pdiv_entries.append(PdivEntry(
+                    name=name, side=side, bs=bs,
+                    depth=pdiv_depth(bs, pdiv_cap_bs)))
+                continue
             by_bs.setdefault(bs, []).append(
                 ((name, side), leaf_block_count(shape)))
 
@@ -172,7 +223,8 @@ def make_plan(factors: Mapping[str, Mapping[str, Any]], ndev: int,
 
     return Plan(ndev=ndev, groups=tuple(groups),
                 device_blocks=tuple(counts),
-                device_flops=tuple(loads))
+                device_flops=tuple(loads),
+                pdiv=tuple(pdiv_entries))
 
 
 # ---------------------------------------------------------------------------
@@ -356,6 +408,12 @@ def make_wu_plan(specs: Mapping[str, LinearSpec],
     if plan.ndev != ndev:
         raise ValueError(
             f"inv_plan was built for {plan.ndev} devices, not {ndev}")
+    if plan.pdiv:
+        raise ValueError(
+            "WU fusion addresses the pooled inverse-shard layout, which "
+            "cap-diverted (pdiv) leaves are not part of; build the "
+            "inv_plan without pdiv_cap_bs for make_wu_plan "
+            f"(diverted: {[e.name + '/' + e.side for e in plan.pdiv]})")
 
     # (name, side) -> (bs, offset into that bs pool's concat order)
     offsets: dict = {}

@@ -127,10 +127,12 @@ def test_param_specs_row_col():
     assert _param_pspec("embed", 2) == ("model", "data")
     assert _param_pspec("lm_head", 2) == ("data", "model")
     assert _param_pspec("final_norm", 1) == (None,)
-    # hybrid pattern-unit stacks are not stage-partitioned (pipeline
-    # covers the uniform scanned families only)
-    assert _param_pspec("units/sub0/attn/wq", 3) == (None, "data",
+    # hybrid pattern-unit and whisper enc/dec stacks are scanned stacks
+    # too: their leading dim rides the stage axis like layers/
+    assert _param_pspec("units/sub0/attn/wq", 3) == ("stage", "data",
                                                      "model")
+    assert _param_pspec("enc/mlp/w1", 3) == ("stage", "data", "model")
+    assert _param_pspec("dec/cross/wo", 3) == ("stage", "model", "data")
 
 
 def test_param_sharding_degrades_not_crashes():

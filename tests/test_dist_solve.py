@@ -127,6 +127,68 @@ def test_plan_rejects_bad_inputs():
         make_plan({"w": {"A": jnp.zeros((4, 8))}}, 2, KCFG)
 
 
+def test_plan_pdiv_cap_diverts_oversized_leaves():
+    """Leaves whose bs exceeds the pool cap become pdiv sub-schedule
+    entries (split depth = halvings to get under the cap) and vanish
+    from the pooled groups; everything under the cap pools as before."""
+    from repro.solve import pdiv_depth
+
+    r = np.random.default_rng(5)
+    factors = _factors()
+    factors["big"] = {"A": _spd(r, (1, 128, 128)),
+                      "G": _spd(r, (2, 64, 64))}
+    plan = make_plan(factors, 4, KCFG, pdiv_cap_bs=48)
+    diverted = {(e.name, e.side): e.depth for e in plan.pdiv}
+    assert diverted == {("big", "A"): 2, ("big", "G"): 1}
+    pooled = {l for g in plan.groups for l in g.leaves}
+    assert not pooled & {("big", "A"), ("big", "G")}
+    # sub-pool leaves unaffected: same pooled assignment as capless
+    base = make_plan(_factors(), 4, KCFG)
+    assert [g.bs for g in plan.groups] == [g.bs for g in base.groups]
+    for ga, gb in zip(plan.groups, base.groups):
+        assert ga.leaves == gb.leaves
+    # depth arithmetic: clamped at odd sizes, 0 when already under cap
+    assert pdiv_depth(96, 24) == 2
+    assert pdiv_depth(96, 5) == 5   # 96 = 2^5 * 3: stops at odd 3
+    assert pdiv_depth(32, 48) == 0
+    # default (no cap) plans never divert
+    assert make_plan(factors, 4, KCFG).pdiv == ()
+
+
+def test_pdiv_path_matches_replicated_allclose():
+    """invert_factor_tree executes the plan's pdiv entries via
+    block-Schur and merges them with the pooled results; parity with
+    the replicated refresh is allclose (Schur algebra in f32)."""
+    cfg = KFACConfig(inv_method="exact")
+    r = np.random.default_rng(3)
+    factors = _factors(3)
+    factors["big"] = {"A": _spd(r, (2, 64, 64)),
+                      "G": _spd(r, (1, 48, 48))}
+    ref = kfac.refresh_inverses(_kstate(factors), cfg).inverses
+    plan = make_plan(factors, 4, cfg, pdiv_cap_bs=32)
+    assert plan.pdiv      # 48- and 64-bs leaves diverted
+    got = jax.jit(
+        lambda f: invert_factor_tree(f, cfg, plan=plan))(factors)
+    fr, fg = _flat(ref), _flat(got)
+    assert fr.keys() == fg.keys()
+    for k in fr:
+        np.testing.assert_allclose(fr[k], fg[k], atol=1e-4, rtol=1e-3,
+                                   err_msg=k)
+
+
+def test_wu_plan_rejects_pdiv_plans():
+    """WU fusion addresses pooled inverse shards, so a cap-diverted
+    inv_plan is a configuration error, not silent corruption."""
+    from repro.solve import make_wu_plan
+
+    r = np.random.default_rng(4)
+    factors = {"big": {"A": _spd(r, (1, 64, 64)),
+                       "G": _spd(r, (1, 64, 64))}}
+    plan = make_plan(factors, 2, KCFG, pdiv_cap_bs=32)
+    with pytest.raises(ValueError, match="pdiv"):
+        make_wu_plan({}, factors, KCFG, ndev=2, inv_plan=plan)
+
+
 def test_cost_model_monotone():
     assert inverse_block_flops(64, KCFG) < inverse_block_flops(128, KCFG)
     fast = KFACConfig(inv_method="composed_fast",

@@ -155,11 +155,122 @@ def test_partition_uniform_requirement():
         partition_stages(big, 2, require_uniform=True)
 
 
-def test_partition_rejects_unsupported_families():
-    with pytest.raises(NotImplementedError):
-        partition_stages(get_smoke_config("whisper-tiny"), 2)
-    with pytest.raises(NotImplementedError):
-        partition_stages(get_smoke_config("recurrentgemma-9b"), 2)
+def _brute_min_max(costs, S, first_extra, last_extra):
+    """Exhaustive free optimum over contiguous partitions."""
+    import itertools
+
+    best = float("inf")
+    for cuts in itertools.combinations(range(1, len(costs)), S - 1):
+        bounds = (0,) + cuts + (len(costs),)
+        worst = 0.0
+        for s in range(S):
+            c = float(sum(costs[bounds[s]:bounds[s + 1]]))
+            if s == 0:
+                c += first_extra
+            if s == S - 1:
+                c += last_extra
+            worst = max(worst, c)
+        best = min(best, worst)
+    return best
+
+
+def test_partition_hybrid_unit_atomicity():
+    """Hybrid stacks partition over whole pattern units — no boundary
+    ever splits a unit — and the ragged tail rides the last stage."""
+    from repro.pipeline.stages import head_flops, layer_flops
+
+    cfg = dataclasses.replace(get_smoke_config("recurrentgemma-9b"),
+                              n_layers=10)        # 3 units + 1 tail
+    p = partition_stages(cfg, 2)
+    assert p.atom == "unit"
+    n_units = cfg.n_layers // len(cfg.pattern)
+    assert p.boundaries[-1] == n_units
+    assert sum(p.layer_counts()) == n_units
+    assert not p.uniform                          # 3 units on 2 stages
+    # tail sublayer + head cost are pinned to the last stage
+    tail_kind = cfg.pattern[0]
+    n_last = p.layer_counts()[-1]
+    unit_cost = sum(layer_flops(cfg, k) for k in cfg.pattern)
+    assert p.costs[-1] == pytest.approx(
+        n_last * unit_cost + layer_flops(cfg, tail_kind)
+        + head_flops(cfg))
+
+
+def test_partition_whisper_enc_dec_pinning():
+    """Whisper atoms are [enc..., dec...]: contiguity pins encoder
+    layers to leading stages and decoder layers to trailing ones, and
+    the embed/head extras stay on the first/last stage."""
+    cfg = get_smoke_config("whisper-tiny")        # 2 enc + 2 dec
+    p = partition_stages(cfg, 2)
+    assert p.atom == "encdec"
+    assert p.n_enc_atoms == cfg.n_enc_layers
+    assert p.boundaries[-1] == cfg.n_enc_layers + cfg.n_dec_layers
+    assert not p.uniform                          # enc/dec split differs
+    seen_dec = False
+    for s in range(p.n_stages):
+        ne, nd = p.enc_dec_counts(s)
+        if seen_dec:
+            assert ne == 0                        # dec never before enc
+        if nd:
+            seen_dec = True
+    e0, _ = p.enc_dec_counts(0)
+    _, d_last = p.enc_dec_counts(p.n_stages - 1)
+    assert e0 > 0 and d_last > 0
+
+
+@pytest.mark.parametrize("name,n_stages,patch", [
+    ("recurrentgemma-9b", 2, {"n_layers": 10}),
+    ("whisper-tiny", 2, {"n_enc_layers": 6, "n_dec_layers": 6,
+                         "n_layers": 6}),
+    ("qwen1.5-0.5b", 3, {"n_layers": 8}),
+])
+def test_partition_within_10pct_of_free_optimum(name, n_stages, patch):
+    """The min-max DP's worst stage cost matches the exhaustive free
+    optimum over contiguous cuts (within the 10% acceptance band)."""
+    from repro.pipeline.stages import _atom_costs, embed_flops
+
+    cfg = dataclasses.replace(get_smoke_config(name), **patch)
+    p = partition_stages(cfg, n_stages)
+    costs, _, _, tail_extra = _atom_costs(cfg)
+    from repro.pipeline.stages import head_flops
+
+    best = _brute_min_max(list(costs), n_stages, embed_flops(cfg),
+                          head_flops(cfg) + tail_extra)
+    assert max(p.costs) <= 1.1 * best
+
+
+def test_stage_specs_nonuniform_families():
+    """kfac_glue.stage_specs cuts each stack to the stage's atom count,
+    drops zero-count stacks, and pins hybrid tail specs to the last
+    stage."""
+    cfg = get_smoke_config("whisper-tiny")
+    part = partition_stages(cfg, 2)
+    specs = steps_mod.kfac_specs(cfg)
+    per_stage = kfac_glue.stage_specs(specs, part)
+    for s, d in enumerate(per_stage):
+        ne, nd = part.enc_dec_counts(s)
+        for name, spec in d.items():
+            want = ne if name.startswith("enc/") else nd
+            assert spec.stack[0] == want
+        if ne == 0:
+            assert not any(n.startswith("enc/") for n in d)
+        if nd == 0:
+            assert not any(n.startswith("dec/") for n in d)
+
+    hcfg = dataclasses.replace(get_smoke_config("recurrentgemma-9b"),
+                               n_layers=10)
+    hpart = partition_stages(hcfg, 2)
+    hspecs = steps_mod.kfac_specs(hcfg)
+    hstage = kfac_glue.stage_specs(hspecs, hpart)
+    tails = [n for n in hspecs if n.startswith("tail/")]
+    assert tails, "upsized hybrid config should have tail specs"
+    assert not any(n.startswith("tail/") for n in hstage[0])
+    assert all(n in hstage[-1] for n in tails)
+    for s, d in enumerate(hstage):
+        k = hpart.layer_counts()[s]
+        for name, spec in d.items():
+            if name.startswith("units/"):
+                assert spec.stack[0] == k
 
 
 def test_partition_balances_nonuniform_head():
