@@ -115,6 +115,7 @@ def main(argv=None):
         kfac_convergence,
         mapping_impact,
         pipeline_bench,
+        precision_ladder,
         roofline,
         serve_engine,
         soi_precision,
@@ -173,6 +174,15 @@ def main(argv=None):
     run("wu_fusion", lambda: wu_fusion.main([]))
     # continuous-batching engine vs static decode (CPU-local)
     run("serve_engine", lambda: serve_engine.main([]))
+
+    # the precision ladder (Fig. 4(b) -> full trajectories + int8
+    # serving); writes BENCH_precision.json. --fast drops the
+    # int4b4/int16b4 rungs and shortens the trajectories.
+    def _pl():
+        score(precision_ladder.headline(precision_ladder.main(
+            ["--fast"] if args.fast else [])))
+
+    run("precision_ladder", _pl)
     # forced-multidevice children (each spawns its own 4-device guard
     # subprocess — the pattern shared with grad_compression)
     if args.fast:

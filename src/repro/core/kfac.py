@@ -25,7 +25,7 @@ from typing import Any, Callable, Mapping, NamedTuple, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import soi
+from repro.core import quantize, soi
 from repro.core.precision_inv import composed_inverse
 from repro.core.soi import LinearSpec
 from repro.dist.api import factor_axes, path_key
@@ -53,6 +53,11 @@ class KFACConfig:
     taylor_terms: int = 4           # Loop A terms ("composed" path)
     refine_steps: int = 2           # Loop x analogue
     weight_decay: float = 0.0
+    # WU-graph matmul precision: "fp32" (bitwise-historical default),
+    # "hilo" (bf16-limb products), "int8" (24-bit codes in 8-bit
+    # slices), or any "int<T>b<S>" ladder rung — parsed by
+    # core.quantize.precision_kind, routed at soi.two_sided_block_vmm
+    precision: str = "fp32"
     # first-order path (non-factored params): adam-style
     adam_b1: float = 0.9
     adam_b2: float = 0.999
@@ -306,7 +311,8 @@ def inverse_pools(inverses: Any, inv_plan) -> dict:
 
 def precondition_pooled(grads_by_name: Mapping[str, jax.Array],
                         inverses: Any, wu_plan,
-                        use_kernel: bool = False) -> dict:
+                        use_kernel: bool = False,
+                        precision: str = "fp32") -> dict:
     """Pooled fused WU graph: one batched two-sided block VMM per
     stacked geometry group instead of one einsum per leaf — the TPU
     image of the paper's fused VMM⊕INV crossbar groups (Sec. V).
@@ -333,8 +339,19 @@ def precondition_pooled(grads_by_name: Mapping[str, jax.Array],
     trust-region dot accumulated in the same pass. Its hi/lo bit-
     sliced products are allclose (not bitwise) to the einsum path, so
     it is opt-in and excluded from the parity contract.
+
+    ``precision`` (``repro.lowp``) routes every pooled and per-leaf
+    VMM through ``quantize.lowp_einsum``; "fp32" stays bitwise-
+    historical. The Pallas kernel *is* the hilo scheme, so
+    ``use_kernel`` composes with "fp32"/"hilo" but not the integer-
+    sliced modes.
     """
     if use_kernel:
+        if quantize.precision_kind(precision) not in ("fp32", "hilo"):
+            raise ValueError(
+                f"use_kernel supports precision 'fp32'/'hilo' (the "
+                f"fused_precond kernel is the hi/lo scheme), not "
+                f"{precision!r}")
         return _precondition_pooled_kernel(grads_by_name, inverses,
                                            wu_plan)
     out = {}
@@ -346,7 +363,8 @@ def precondition_pooled(grads_by_name: Mapping[str, jax.Array],
                     grads_by_name[m.name],
                     inverses[m.a_owner]["A_inv"],
                     inverses[m.name]["G_inv"],
-                    axes=factor_axes(m.name))
+                    axes=factor_axes(m.name),
+                    precision=precision)
             continue
         def rs(x, shape):            # reshape only when it moves
             return x if x.shape == shape else x.reshape(shape)
@@ -362,7 +380,7 @@ def precondition_pooled(grads_by_name: Mapping[str, jax.Array],
                           (m.n_stack, grp.nb_o, bo, bo)))
         o = soi.two_sided_block_vmm(
             jnp.concatenate(a_s), jnp.concatenate(gs),
-            jnp.concatenate(g_s))
+            jnp.concatenate(g_s), precision=precision)
         ofs = 0
         for m in grp.members:
             blk = rs(o[ofs:ofs + m.n_stack],
@@ -419,7 +437,8 @@ def precondition(grads: Any, state: KFACState,
         grads_by_name = {path_key(p): g for p, g in leaves
                          if path_key(p) in specs}
         pooled = precondition_pooled(grads_by_name, state.inverses,
-                                     wu_plan, use_kernel=use_kernel)
+                                     wu_plan, use_kernel=use_kernel,
+                                     precision=cfg.precision)
         missing = set(grads_by_name) - set(pooled)
         if missing:
             # a stale plan (built for a different spec set) would
@@ -440,7 +459,8 @@ def precondition(grads: Any, state: KFACState,
             a_name = spec.share_a_with or name
             a_inv = state.inverses[a_name]["A_inv"]
             out.append(soi.block_precondition(
-                g, a_inv, inv["G_inv"], axes=factor_axes(name)))
+                g, a_inv, inv["G_inv"], axes=factor_axes(name),
+                precision=cfg.precision))
         else:
             out.append(g)
     return jax.tree_util.tree_unflatten(treedef, out)

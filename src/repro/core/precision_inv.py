@@ -57,9 +57,11 @@ __all__ = [
 # ---------------------------------------------------------------------------
 
 def _quant(x: np.ndarray, bits: int, scale: float) -> np.ndarray:
+    # symmetric clip: the sign/magnitude converters have no -2**bits code
+    # (same saturation contract as core.quantize.quantize_int)
     step = scale * 2.0 ** (-bits)
     q = np.round(x / step)
-    np.clip(q, -(2.0 ** bits), 2.0 ** bits - 1, out=q)
+    np.clip(q, -(2.0 ** bits - 1), 2.0 ** bits - 1, out=q)
     return q * step
 
 
@@ -124,7 +126,11 @@ def _loop_b_solve(A_H_lu, r: np.ndarray, cfg: CircuitConfig,
     slice on the INV crossbar, shift-and-add the ADC outputs."""
     step = rhs_scale * 2.0 ** (-cfg.q_b)
     q = np.round(r / step)
-    np.clip(q, -(2.0 ** cfg.q_b), 2.0 ** cfg.q_b - 1, out=q)
+    # symmetric clip: code -2**q_b would need q_b + 1 magnitude bits and
+    # the loops_b slices below would silently drop its top bit, turning a
+    # DAC-grid-saturating rhs component into 0 (and Loop x can never
+    # recover it: the residual re-saturates at every rescale)
+    np.clip(q, -(2.0 ** cfg.q_b - 1), 2.0 ** cfg.q_b - 1, out=q)
     sign = np.sign(q)
     mag = np.abs(q)
     acc = np.zeros_like(r)

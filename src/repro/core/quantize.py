@@ -22,6 +22,7 @@ quantizers are symmetric and saturating.
 from __future__ import annotations
 
 import dataclasses
+import re
 from typing import Tuple
 
 import jax
@@ -38,19 +39,24 @@ def quantize_fixed(x: jax.Array, bits: int, scale: jax.Array) -> jax.Array:
     """Quantize ``x`` onto a ``bits``-fractional-bit grid of ``scale``.
 
     Returns the *dequantized* value (i.e. a float on the grid). Values are
-    clipped to [-scale, scale).
+    clipped to (-scale, scale).
     """
     step = scale * (2.0 ** (-bits))
-    q = jnp.round(x / step)
-    q = jnp.clip(q, -(2.0 ** bits), 2.0 ** bits - 1)
-    return q * step
+    return quantize_int(x, bits, scale) * step
 
 
 def quantize_int(x: jax.Array, bits: int, scale: jax.Array) -> jax.Array:
-    """Quantize to signed integer grid codes in [-2**bits, 2**bits - 1]."""
+    """Quantize to signed integer grid codes in [-(2**bits - 1), 2**bits - 1].
+
+    The clip is symmetric: the two's-complement endpoint ``-2**bits``
+    would need ``bits + 1`` magnitude bits, which the sign/magnitude
+    slice decomposition (:func:`bit_slices_fixed`, ``ceil(bits/slice)``
+    slices) cannot carry — it would silently drop the top bit and
+    reconstruct 0 for exactly the saturated-negative input.
+    """
     step = scale * (2.0 ** (-bits))
     q = jnp.round(x / step)
-    return jnp.clip(q, -(2.0 ** bits), 2.0 ** bits - 1)
+    return jnp.clip(q, -(2.0 ** bits - 1), 2.0 ** bits - 1)
 
 
 def split_hi_lo_fixed(
@@ -87,7 +93,7 @@ def bit_slices_fixed(
     two's-complement.
     """
     n = -(-total_bits // slice_bits)
-    q = quantize_int(x, total_bits, scale)  # codes in [-2**T, 2**T)
+    q = quantize_int(x, total_bits, scale)  # codes in [-(2**T - 1), 2**T - 1]
     # Work with a sign/magnitude representation: the analog driver applies
     # the sign by swapping the differential pair; each slice is unsigned.
     sign = jnp.sign(q)
@@ -163,6 +169,136 @@ def hilo_matmul_exact_lhs(a16: jax.Array, b: jax.Array, *,
             preferred_element_type=jnp.float32, precision=precision)
 
     return mm(a16, b_hi) + mm(a16, b_lo)
+
+
+# ---------------------------------------------------------------------------
+# Low-precision einsum: one routing point for the WU graph's matmuls
+# ---------------------------------------------------------------------------
+
+#: The shipping knob values (``--precision`` on repro.launch.train).
+PRECISIONS = ("fp32", "hilo", "int8")
+
+# extended spellings for the precision ladder: "int<total>b<slice>" is an
+# integer-sliced product with <total>-bit codes composed from <slice>-bit
+# slices (e.g. "int16b4": 4 chained 4-bit DAC slices per operand)
+_INT_SPEC = re.compile(r"^int(\d+)b(\d+)$")
+
+
+def precision_kind(precision):
+    """Parse a precision spec into ``'fp32' | 'hilo' | (total, slice)``.
+
+    ``"int8"`` — the shipping int8 mode — means 8-bit *hardware operands*:
+    24-bit fixed-point codes composed from three 8-bit slices per side,
+    the ISAAC-style exact bit-sliced VMM. ``"int<T>b<S>"`` spells any
+    other rung of the ladder explicitly.
+    """
+    if precision in (None, "fp32"):
+        return "fp32"
+    if precision == "hilo":
+        return "hilo"
+    if precision == "int8":
+        return (24, 8)
+    m = _INT_SPEC.match(str(precision))
+    if m:
+        total, sl = int(m.group(1)), int(m.group(2))
+        if not (1 <= sl <= total):
+            raise ValueError(
+                f"precision {precision!r}: need 1 <= slice bits "
+                f"<= total bits, got total={total} slice={sl}")
+        return (total, sl)
+    raise ValueError(
+        f"unknown precision {precision!r}; expected one of "
+        f"{PRECISIONS} or 'int<total>b<slice>' (e.g. 'int16b4')")
+
+
+def split_limbs_bf16(x: jax.Array, limbs: int = 3) -> list[jax.Array]:
+    """Generalized :func:`split_hi_lo_bf16`: ``sum(limbs) ≈ x`` with
+    each limb bf16 and limb ``i`` carrying mantissa bits ``[8i, 8i+8)``
+    — the MXU image of chaining ``k`` ReRAM cell columns per value."""
+    r = x.astype(jnp.float32)
+    out = []
+    for _ in range(limbs):
+        l = r.astype(jnp.bfloat16)
+        out.append(l)
+        r = r - l.astype(jnp.float32)
+    return out
+
+
+def hilo_einsum(spec: str, a: jax.Array, b: jax.Array) -> jax.Array:
+    """``einsum(spec, a, b)`` where every contraction operand is bf16.
+
+    Unlike :func:`hilo_matmul` (two limbs, three partials — enough
+    inside self-correcting Newton-Schulz loops), the WU einsums are
+    one-shot, and the budget is >= 16 effective bits on the update
+    *after two chained products*. A 2-limb split leaves ~2**-18
+    operand error -> ~15.4 achieved bits on the smoke-arch update
+    (measured), just under budget. Three limbs per operand and the six
+    partials of combined limb order <= 2 put the operand error at
+    ~2**-27; the dropped (mid*lo, lo*lo) terms are below 2**-36.
+    :func:`kernels.bitslice_mm` is the Pallas TPU form of the same
+    partial-product scheme.
+    """
+    a_l = split_limbs_bf16(a, 3)
+    b_l = split_limbs_bf16(b, 3)
+
+    def ein(x, y):
+        return jnp.einsum(spec, x, y, preferred_element_type=jnp.float32)
+
+    acc = None
+    for i in range(3):
+        for j in range(3):
+            if i + j > 2:
+                continue
+            p = ein(a_l[i], b_l[j])
+            acc = p if acc is None else acc + p
+    return acc
+
+
+def int_slice_einsum(spec: str, a: jax.Array, b: jax.Array, *,
+                     total_bits: int = 24,
+                     slice_bits: int = 8) -> jax.Array:
+    """Exact bit-sliced ``einsum(spec, a, b)`` of the quantized operands.
+
+    Each operand is quantized to ``total_bits``-bit fixed-point codes on
+    its per-tensor amax scale and decomposed into ``ceil(total/slice)``
+    sign/magnitude slices; every pairwise slice product runs as its own
+    einsum (the crossbar pass) and is shift-added with weight
+    ``2**((i+j)*slice)`` (the digital S+A unit). The composition is
+    *exact* in the quantized codes, so the only error is the operand
+    quantization itself (~2**-total relative) — "more slices composed,
+    more accurate", the paper's Loop-b story applied to the WU graph.
+    """
+    sa = amax_scale(a)
+    sb = amax_scale(b)
+    a_sl = bit_slices_fixed(a, total_bits, slice_bits, sa)
+    b_sl = bit_slices_fixed(b, total_bits, slice_bits, sb)
+    acc = None
+    for i, asl in enumerate(a_sl):
+        for j, bsl in enumerate(b_sl):
+            part = jnp.einsum(spec, asl, bsl,
+                              preferred_element_type=jnp.float32)
+            part = part * (2.0 ** ((i + j) * slice_bits))
+            acc = part if acc is None else acc + part
+    return acc * (sa * sb) * (2.0 ** (-2 * total_bits))
+
+
+def lowp_einsum(spec: str, a: jax.Array, b: jax.Array, *,
+                precision: str = "fp32") -> jax.Array:
+    """The WU graph's single matmul routing point.
+
+    ``precision="fp32"`` is *bitwise identical* to
+    ``jnp.einsum(spec, a, b, preferred_element_type=jnp.float32)`` — the
+    default path through :mod:`core.soi` / :mod:`solve.fused_wu` is
+    unchanged. ``"hilo"`` routes through bf16 limb products,
+    ``"int8"`` / ``"int<T>b<S>"`` through the sliced integer product.
+    """
+    kind = precision_kind(precision)
+    if kind == "fp32":
+        return jnp.einsum(spec, a, b, preferred_element_type=jnp.float32)
+    if kind == "hilo":
+        return hilo_einsum(spec, a, b)
+    total, sl = kind
+    return int_slice_einsum(spec, a, b, total_bits=total, slice_bits=sl)
 
 
 @dataclasses.dataclass(frozen=True)

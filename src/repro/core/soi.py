@@ -28,6 +28,7 @@ from typing import Mapping, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import quantize
 from repro.dist.api import shard_hint
 
 
@@ -193,18 +194,27 @@ def init_inverses(specs: Mapping[str, LinearSpec], bs: int) -> dict:
 
 
 def two_sided_block_vmm(a_inv: jax.Array, gp: jax.Array,
-                        g_inv: jax.Array) -> jax.Array:
+                        g_inv: jax.Array, *,
+                        precision: str = "fp32") -> jax.Array:
     """``A_inv[i] @ g[i, j] @ G_inv[j]`` on blocked tiles, contraction
     order pinned left-first. Both the per-leaf WU path (tiles batched
     over ``(*stack, nb_i, nb_o)``) and the pooled fused path (tiles
     batched over one flat pool dim) route through matmuls with exactly
     this association, which is what makes the two bitwise identical —
     a 3-operand einsum would leave the association to the contraction
-    planner."""
-    tmp = jnp.einsum("...iab,...ibjc->...iajc", a_inv, gp,
-                     preferred_element_type=jnp.float32)
-    return jnp.einsum("...iajc,...jcd->...iajd", tmp, g_inv,
-                      preferred_element_type=jnp.float32)
+    planner.
+
+    ``precision`` routes both VMMs through
+    :func:`core.quantize.lowp_einsum` — ``"fp32"`` lowers to exactly the
+    historical einsums (bitwise identical), ``"hilo"``/``"int8"`` to
+    the bf16-limb / integer-bit-sliced products. Per-leaf and pooled
+    callers pass the same knob, so the parity contract holds at every
+    precision.
+    """
+    tmp = quantize.lowp_einsum("...iab,...ibjc->...iajc", a_inv, gp,
+                               precision=precision)
+    return quantize.lowp_einsum("...iajc,...jcd->...iajd", tmp, g_inv,
+                                precision=precision)
 
 
 def gather_grad_tiles(g: jax.Array, stack: Tuple[int, ...], bi: int,
@@ -239,7 +249,8 @@ def scatter_grad_tiles(tiles: jax.Array, stack: Tuple[int, ...],
 
 def block_precondition(g: jax.Array, a_inv: jax.Array,
                        g_inv: jax.Array,
-                       axes=("data", "model")) -> jax.Array:
+                       axes=("data", "model"), *,
+                       precision: str = "fp32") -> jax.Array:
     """Apply ``blockdiag(A_inv) @ g @ blockdiag(G_inv)``.
 
     ``g``: (*stack, d_in, d_out); ``a_inv``: (*stack, nb_i, bi, bi);
@@ -268,7 +279,7 @@ def block_precondition(g: jax.Array, a_inv: jax.Array,
     nb_i, nb_o = gp.shape[-2] // bi, gp.shape[-1] // bo
     gp = gp.reshape(stack + (nb_i, bi, nb_o, bo))
     gp = shard_hint(gp, *ns, ain, None, gout, None)
-    out = two_sided_block_vmm(a_inv, gp, g_inv)
+    out = two_sided_block_vmm(a_inv, gp, g_inv, precision=precision)
     out = shard_hint(out, *ns, ain, None, gout, None)
     out = out.reshape(stack + (nb_i * bi, nb_o * bo))
     out = shard_hint(out, *ns, ain, gout)

@@ -73,6 +73,11 @@ def build_parser() -> argparse.ArgumentParser:
                          "(steady-state numbers); --no-warmup restores "
                          "the old cold-start timing")
     # engine path
+    ap.add_argument("--quant", choices=("none", "int8"),
+                    default="none",
+                    help="engine path: resident weight + KV cache "
+                         "precision (int8: per-channel weight scales, "
+                         "per-position KV scales — repro.lowp)")
     ap.add_argument("--requests", type=int, default=8,
                     help="engine path: synthetic trace size")
     ap.add_argument("--max-slots", type=int, default=4)
@@ -104,7 +109,7 @@ def serve_engine(cfg, args, mesh):
         eng = ServeEngine(cfg, params, EngineConfig(
             max_slots=args.max_slots, max_len=max_len,
             decode_chunk=args.decode_chunk, seed=args.seed,
-            **sampling_args(args)), mesh=mesh)
+            quant=args.quant, **sampling_args(args)), mesh=mesh)
         reqs, arrivals = _trace(cfg, args)
         if args.warmup:
             # compile the decode chunk + every prefill bucket the trace
@@ -130,6 +135,8 @@ def serve_engine(cfg, args, mesh):
         "arch": cfg.name,
         "mode": "engine",
         "sampling": sampling_args(args)["method"],
+        "quant": args.quant,
+        "resident_bytes": eng.resident_bytes(),
         "requests": len(done),
         "max_slots": args.max_slots,
         "decode_chunk": args.decode_chunk,

@@ -29,7 +29,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config, get_smoke_config
-from repro.core import kfac
+from repro.core import kfac, quantize
 from repro.core.kfac import KFACConfig
 from repro.data import SyntheticTokens
 from repro.dist import sharding as shard_rules
@@ -360,6 +360,13 @@ def main(argv=None):
     ap.add_argument("--smw-rank", type=int, default=64,
                     help="max rank per SMW update; larger token sets "
                          "are strided down to this many columns")
+    ap.add_argument("--precision", default="fp32",
+                    choices=quantize.PRECISIONS,
+                    help="WU-graph matmul precision (repro.lowp): "
+                         "fp32 = historical bitwise path; hilo = bf16 "
+                         "limb products (MXU operands are bf16); int8 "
+                         "= exact bit-sliced integer products (24-bit "
+                         "codes in 8-bit hardware slices)")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=20)
     ap.add_argument("--inject-failure-at", type=int, default=-1,
@@ -374,7 +381,8 @@ def main(argv=None):
         lr=args.lr, damping=args.damping,
         stats_every=args.stats_every, inv_every=args.inv_every,
         block_size=min(args.block_size, cfg.soi_block),
-        stats_batch=args.batch, stats_seq=args.seq)
+        stats_batch=args.batch, stats_seq=args.seq,
+        precision=args.precision)
 
     if args.optimizer == "kfac":
         program = KFACProgram(cfg, kcfg, seed=args.seed,

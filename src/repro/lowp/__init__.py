@@ -1,0 +1,67 @@
+"""repro.lowp — the coherent end-to-end low-precision mode.
+
+The paper's central claim is 16-bit-accurate SOI built from 8-bit
+INV/VMM circuitry (Sec. III, Fig. 4(b)). This package is that claim
+applied to the whole stack rather than a single block:
+
+* **Training** — ``--precision {fp32,hilo,int8}`` on
+  ``repro.launch.train`` (a ``KFACConfig.precision`` field). Every
+  matmul of the WU graph — the per-leaf, pooled-fused and distributed
+  owner-routed paths all route through
+  ``core.quantize.lowp_einsum`` at ``soi.two_sided_block_vmm`` /
+  ``solve.fused_wu`` — runs as bf16 limb products ("hilo") or exact
+  integer bit-sliced products ("int8": 24-bit codes composed from
+  8-bit hardware slices). The SOI inverse refresh is already the
+  composed hi/lo inversion (``precision_inv.composed_inverse``) in
+  every mode — that *is* the paper's INV datapath. Budget: >= 16
+  effective bits on the preconditioned update vs fp32
+  (:func:`parity.update_parity`).
+* **Serving** — ``--quant int8`` on ``repro.launch.serve``: int8
+  weights (per-channel scales) + int8 KV cache (per-position scales
+  stored as sibling pool leaves), dequant fused into the jitted
+  prefill/decode programs (:mod:`.serve_quant`). Greedy tokens match
+  the fp32 engine at smoke scale; ~3.5x weight and ~1.9x KV memory
+  reduction measured in ``benchmarks/precision_ladder.py``.
+
+``benchmarks/precision_ladder.py`` extends the Fig. 4(b)
+error-vs-iteration curves from single blocks to full training
+trajectories at 4/8/16-bit slices and writes ``BENCH_precision.json``.
+"""
+
+from repro.core.quantize import (
+    PRECISIONS,
+    hilo_einsum,
+    int_slice_einsum,
+    lowp_einsum,
+    precision_kind,
+)
+from repro.lowp.parity import trajectory_parity, update_parity
+from repro.lowp.serve_parity import serve_greedy_parity, trained_params
+from repro.lowp.serve_quant import (
+    QTensor,
+    dequantize_kv,
+    dequantize_params,
+    quantize_kv,
+    quantize_params,
+    requantize_kv,
+    tree_bytes,
+)
+
+__all__ = [
+    "PRECISIONS",
+    "precision_kind",
+    "lowp_einsum",
+    "hilo_einsum",
+    "int_slice_einsum",
+    "update_parity",
+    "trajectory_parity",
+    "serve_greedy_parity",
+    "trained_params",
+    "QTensor",
+    "quantize_params",
+    "dequantize_params",
+    "quantize_kv",
+    "dequantize_kv",
+    "requantize_kv",
+    "tree_bytes",
+]

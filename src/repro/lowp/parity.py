@@ -1,0 +1,170 @@
+"""fp32 reference-parity harness for the low-precision training path.
+
+The ROADMAP error budget for ``--precision hilo|int8`` is **>= 16
+effective bits on the preconditioned update**: run the same WU graph at
+fp32 and at the low precision from *identical* state and measure
+``core.precision_inv.achieved_bits`` on the output. Two harnesses:
+
+* :func:`update_parity` — the budget's unit of account. One warmed
+  training state (stats pass + inverse refresh, so the inverses are
+  real, not the identity init that would make parity trivial), one
+  gradient, ``kfac.precondition`` at fp32 vs the candidate precision,
+  per-leaf achieved bits on every factored update.
+* :func:`trajectory_parity` — the Fig. 4(b) story extended to full
+  trajectories: two complete training runs from shared init, identical
+  data, per-step achieved bits between the parameter trees. Divergence
+  *grows* with steps — training is chaotic, each step amplifies the
+  per-update quantization error (~3-4x/step at smoke scale; same
+  amplification measured for any reordered-but-correct variant in
+  EXPERIMENTS.md §Perf 5) — so trajectory curves rank precisions
+  (more slices composed -> slower divergence, the paper's Loop-b
+  composition claim) rather than gate on a fixed bit count.
+
+Dense LM archs only: the harness feeds token batches; the enc/dec and
+multimodal families add nothing to a precision comparison.
+"""
+
+from __future__ import annotations
+
+from dataclasses import replace
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core import kfac
+from repro.core.kfac import KFACConfig
+from repro.core.precision_inv import achieved_bits
+from repro.data import SyntheticTokens
+from repro.dist.api import path_key
+from repro.launch import steps as steps_mod
+from repro.launch.steps import TrainState
+
+__all__ = ["update_parity", "trajectory_parity"]
+
+
+def _base_kcfg(cfg, block_size: int, batch: int, seq: int) -> KFACConfig:
+    return KFACConfig(block_size=min(block_size, cfg.soi_block),
+                      stats_batch=batch, stats_seq=seq,
+                      stats_every=1, inv_every=1)
+
+
+def _batch(cfg, batch: int, seq: int, seed: int, step: int = 0):
+    ds = SyntheticTokens(vocab=cfg.vocab, seq_len=seq,
+                         global_batch=batch, seed=seed)
+    return {"tokens": jnp.asarray(ds.batch_slice(step, 0, batch))}
+
+
+def _warm_state(cfg, kcfg: KFACConfig, batch, seed: int) -> TrainState:
+    """Init + one stats pass + one inverse refresh: the factors hold
+    real Gram statistics and the inverses are genuinely non-identity —
+    the state every precision variant starts from, computed once at
+    fp32 so the comparison isolates the WU matmuls."""
+    mod = steps_mod.model_module(cfg)
+    specs = steps_mod.kfac_specs(cfg)
+    params = mod.init(cfg, jax.random.PRNGKey(seed))
+    state = TrainState(params, kfac.init(params, specs, kcfg))
+    stats = jax.jit(steps_mod.make_stats_step(cfg, kcfg))
+    state, _ = stats(state, batch)
+    inv = jax.jit(steps_mod.make_inv_step(cfg, kcfg))
+    return inv(state)
+
+
+def _grads(cfg, state: TrainState, batch):
+    mod = steps_mod.model_module(cfg)
+
+    def loss_of(p):
+        loss, _ = mod.loss_fn(cfg, p, batch)
+        return loss
+
+    return jax.grad(loss_of)(state.params)
+
+
+def _factored_bits(tree, ref, specs) -> dict:
+    bits = {}
+    for (path, x), (_, r) in zip(
+            jax.tree_util.tree_flatten_with_path(tree)[0],
+            jax.tree_util.tree_flatten_with_path(ref)[0]):
+        name = path_key(path)
+        if name in specs:
+            bits[name] = float(achieved_bits(
+                np.asarray(x, np.float64), np.asarray(r, np.float64)))
+    return bits
+
+
+def update_parity(precision: str, *, arch: str = "qwen1.5-0.5b",
+                  batch: int = 4, seq: int = 32, block_size: int = 64,
+                  seed: int = 0, fused: bool = True,
+                  kcfg: Optional[KFACConfig] = None) -> dict:
+    """Achieved bits of one preconditioned update vs the fp32 path.
+
+    Returns ``{"min_bits", "mean_bits", "per_leaf", "precision"}`` —
+    ``min_bits`` is the acceptance number (worst factored leaf).
+    """
+    cfg = get_smoke_config(arch)
+    kcfg = kcfg or _base_kcfg(cfg, block_size, batch, seq)
+    kcfg = replace(kcfg, precision="fp32")
+    bt = _batch(cfg, batch, seq, seed)
+    state = _warm_state(cfg, kcfg, bt, seed)
+    grads = _grads(cfg, state, bt)
+    specs = steps_mod.kfac_specs(cfg)
+    wu_plan = steps_mod.make_wu_plan_for(cfg, kcfg) if fused else None
+
+    def pre(p):
+        return jax.jit(lambda g: kfac.precondition(
+            g, state.kfac, specs, replace(kcfg, precision=p),
+            wu_plan=wu_plan))(grads)
+
+    ref = pre("fp32")
+    out = pre(precision)
+    bits = _factored_bits(out, ref, specs)
+    return {"precision": precision,
+            "min_bits": min(bits.values()),
+            "mean_bits": float(np.mean(list(bits.values()))),
+            "per_leaf": bits}
+
+
+def trajectory_parity(precision: str, *, arch: str = "qwen1.5-0.5b",
+                      steps: int = 4, batch: int = 4, seq: int = 32,
+                      block_size: int = 64, seed: int = 0,
+                      kcfg: Optional[KFACConfig] = None) -> dict:
+    """Per-step achieved bits of a full low-precision training
+    trajectory against the fp32 trajectory from shared init.
+
+    Every step runs the complete cadence — stats, inverse refresh,
+    train — at the candidate precision (the refresh itself is the
+    composed hi/lo inversion in every mode; the knob moves the WU
+    VMMs). Returns per-step ``bits`` (worst factored leaf, params
+    tree) and the two loss histories.
+    """
+    cfg = get_smoke_config(arch)
+    kcfg = kcfg or _base_kcfg(cfg, block_size, batch, seq)
+    specs = steps_mod.kfac_specs(cfg)
+
+    def run(p):
+        kc = replace(kcfg, precision=p)
+        bt0 = _batch(cfg, batch, seq, seed)
+        state = _warm_state(cfg, kc, bt0, seed)
+        wu_plan = steps_mod.make_wu_plan_for(cfg, kc)
+        train = jax.jit(steps_mod.make_train_step(cfg, kc,
+                                                  wu_plan=wu_plan))
+        stats = jax.jit(steps_mod.make_stats_step(cfg, kc))
+        inv = jax.jit(steps_mod.make_inv_step(cfg, kc))
+        traj, losses = [], []
+        for i in range(steps):
+            bt = _batch(cfg, batch, seq, seed, step=i + 1)
+            state, _ = stats(state, bt)
+            state = inv(state)
+            state, m = train(state, bt)
+            traj.append(state.params)
+            losses.append(float(m["loss"]))
+        return traj, losses
+
+    ref_traj, ref_losses = run("fp32")
+    lp_traj, lp_losses = run(precision)
+    bits = [min(_factored_bits(lp, ref, specs).values())
+            for lp, ref in zip(lp_traj, ref_traj)]
+    return {"precision": precision, "steps": steps, "bits": bits,
+            "loss_fp32": ref_losses, "loss_lowp": lp_losses}

@@ -1,0 +1,176 @@
+"""Int8 serving quantization: weights + KV cache codes with scales.
+
+The serving tier of ``repro.lowp``: the resident state of the engine —
+the weight tree and the slot-pooled KV cache — is stored as int8 codes
+with float32 scales, and dequantized *inside* the jitted prefill/decode
+programs right where the matmuls consume them (the "dequant fused into
+the decode matmul" layout every production int8 stack uses; XLA fuses
+the ``codes * scale`` broadcast into the consumer).
+
+Layout
+------
+* Weights: every ``ndim >= 2`` leaf becomes a :class:`QTensor` —
+  ``q`` int8 codes + ``scale`` fp32 per-channel amax over the
+  second-to-last axis (one scale column per output channel), so each
+  matmul's dequant is a rank-1 broadcast. Small leaves (biases, norm
+  gains) stay fp32: no memory to win, real accuracy to lose. The
+  (tied) embedding stays fp32 too — the W8-linear-only convention:
+  its quantization error lands directly on the logits where greedy
+  argmax decides, for a small slice of the weight bytes.
+* KV cache: the pool's ``k``/``v`` leaves become int8 codes with
+  sibling ``k_scale``/``v_scale`` leaves of the same tree node,
+  per-position scales (amax over the head dim) — shape = the kv leaf
+  minus its last axis. The sibling names ride the existing
+  ``serve.pool`` machinery untouched: ``slot_dim`` resolves
+  ``*_scale`` leaves to the same slot axis as their parent, so
+  ``write_slot``/``reset_slot`` work on the combined tree.
+
+Saturation contract: codes clip symmetrically to ±(2**7 - 1) — the
+same ``-2**bits`` overflow the sliced training datapath had
+(`core.quantize.quantize_int`) would otherwise admit a code whose
+magnitude an int8 buffer cannot represent.
+
+Requantization is code-stable on untouched rows: the element attaining
+the amax maps to code ±127 exactly, so a dequant → requant round trip
+recovers the same codes (the fp32 scale can wander by an ulp, bounded,
+never the codes) — the decode loop can requantize the whole pool every
+chunk without drift on rows it did not write (pinned in
+tests/test_lowp.py).
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "QTensor",
+    "quantize_params",
+    "dequantize_params",
+    "quantize_kv",
+    "dequantize_kv",
+    "requantize_kv",
+    "tree_bytes",
+]
+
+_QMAX = 127.0  # int8 sym grid: codes in [-127, 127]; -128 is never used
+
+
+class QTensor(NamedTuple):
+    """Int8 codes + fp32 scale; ``q * scale`` dequantizes."""
+
+    q: jax.Array
+    scale: jax.Array
+
+
+def _encode(x: jax.Array, axis: int) -> QTensor:
+    x = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(x), axis=axis, keepdims=True)
+    scale = jnp.where(amax == 0, jnp.ones_like(amax), amax) / _QMAX
+    q = jnp.clip(jnp.round(x / scale), -_QMAX, _QMAX).astype(jnp.int8)
+    return QTensor(q, scale)
+
+
+def quantize_params(params: Any) -> Any:
+    """Weight tree -> mixed tree of :class:`QTensor` (matmul leaves)
+    and untouched fp32 leaves (vectors/scalars and embedding tables —
+    see module docstring)."""
+
+    def enc(path, p):
+        if p.ndim < 2:
+            return p
+        if any("embed" in str(getattr(k, "key", k)) for k in path):
+            return p
+        return _encode(p, axis=-2)
+
+    return jax.tree_util.tree_map_with_path(enc, params)
+
+
+def dequantize_params(qparams: Any, dtype=jnp.float32) -> Any:
+    """Inverse of :func:`quantize_params`; called *inside* the jitted
+    serve programs so the broadcast fuses into the consuming matmul."""
+
+    def deq(leaf):
+        if isinstance(leaf, QTensor):
+            return (leaf.q.astype(jnp.float32) * leaf.scale).astype(dtype)
+        return leaf
+
+    return jax.tree.map(
+        deq, qparams, is_leaf=lambda l: isinstance(l, QTensor))
+
+
+def _walk_kv(node, fn):
+    """Apply ``fn(kv_leaf, scale_leaf_or_None, base) -> (kv, scale)`` to
+    every ``k``/``v`` entry of a nested dict, managing the ``*_scale``
+    siblings; other entries pass through."""
+    if not isinstance(node, dict):
+        return node
+    out = {}
+    for key, val in node.items():
+        if key.endswith("_scale"):
+            continue  # handled with its parent leaf
+        if isinstance(val, dict):
+            out[key] = _walk_kv(val, fn)
+        elif key.split("/")[-1] in ("k", "v"):
+            kv, scale = fn(val, node.get(key + "_scale"), key)
+            out[key] = kv
+            if scale is not None:
+                out[key + "_scale"] = scale
+        else:
+            out[key] = val
+    return out
+
+
+def quantize_kv(pool: Any) -> Any:
+    """KV leaves -> int8 codes + ``k_scale``/``v_scale`` siblings
+    (per-position amax over the head dim). Non-KV leaves (``pos``,
+    ``idx``, ssm states) are untouched."""
+
+    def enc(kv, _scale, _key):
+        qt = _encode(kv, axis=-1)
+        return qt.q, qt.scale[..., 0]
+
+    return _walk_kv(pool, enc)
+
+
+def dequantize_kv(pool: Any, dtype=jnp.float32) -> Any:
+    """Codes + scales -> float KV tree with the scale leaves removed —
+    exactly the structure ``decode_step`` expects. fp32 by default so a
+    dequant → requant round trip is exact (bf16 would re-round the
+    codes and let them wander chunk over chunk)."""
+
+    def deq(kv, scale, key):
+        if scale is None:  # already float (e.g. an unquantized pool)
+            return kv, None
+        return ((kv.astype(jnp.float32)
+                 * scale[..., None]).astype(dtype), None)
+
+    return _walk_kv(pool, deq)
+
+
+def requantize_kv(new_pool: Any, like: Any) -> Any:
+    """Float KV tree from ``decode_step`` -> resident int8 layout.
+
+    ``like`` is the previous resident pool: its dtypes restore the
+    non-KV leaves (the engine's historical dtype contract), its
+    structure says which scale siblings to rebuild. Untouched rows
+    keep their codes exactly (code-stable requantization, see module
+    docstring)."""
+
+    def req(kv, _scale, _key):
+        qt = _encode(kv, axis=-1)
+        return qt.q, qt.scale[..., 0]
+
+    out = _walk_kv(new_pool, req)
+    return jax.tree.map(
+        lambda n, o: n if n.dtype == o.dtype else n.astype(o.dtype),
+        out, like)
+
+
+def tree_bytes(tree: Any) -> int:
+    """Resident bytes of a pytree (QTensor leaves count codes+scales)."""
+    return sum(
+        leaf.size * leaf.dtype.itemsize
+        for leaf in jax.tree.leaves(tree))

@@ -160,6 +160,10 @@ class EngineConfig:
     top_k: int = 0
     buckets: Optional[Tuple[int, ...]] = None
     seed: int = 0
+    # "int8": resident weights + KV cache stored as int8 codes with
+    # fp32 scales (repro.lowp.serve_quant); dequant runs inside the
+    # jitted programs, fused into the consuming matmuls
+    quant: str = "none"
 
 
 class ServeEngine:
@@ -171,13 +175,27 @@ class ServeEngine:
                 "token-only prompt families (dense/moe/ssm/hybrid)")
         from repro.launch import steps as steps_mod
 
+        if ecfg.quant not in ("none", "int8"):
+            raise ValueError(f"unknown quant mode {ecfg.quant!r}; "
+                             "one of ('none', 'int8')")
         self.cfg = cfg
         self.ecfg = ecfg
+        self._quant = ecfg.quant == "int8"
+        if self._quant:
+            from repro.lowp import serve_quant
+            self._sq = serve_quant
+            # resident weights: int8 codes + per-channel scales
+            params = jax.jit(serve_quant.quantize_params)(params)
         self.params = params
         self.mod = steps_mod.model_module(cfg)
         self.mesh = mesh
 
         pool = pool_mod.init_pool(cfg, ecfg.max_slots, ecfg.max_len)
+        if self._quant:
+            # resident KV: int8 codes + sibling *_scale leaves (the
+            # pool machinery resolves those names to the same slot axis
+            # as their parent, so write/reset ride unchanged)
+            pool = jax.jit(self._sq.quantize_kv)(pool)
         if mesh is not None:
             from repro.dist import sharding as shard_rules
             pool = jax.device_put(
@@ -230,8 +248,11 @@ class ServeEngine:
 
     def _make_prefill(self):
         cfg, mod, max_len = self.cfg, self.mod, self.ecfg.max_len
+        quant = self._quant
 
         def prefill_one(params, tokens, length):
+            if quant:
+                params = self._sq.dequantize_params(params)
             cache = mod.init_cache(cfg, 1, max_len)
             logits, cache = mod.prefill(
                 cfg, params, {"tokens": tokens}, cache,
@@ -241,8 +262,14 @@ class ServeEngine:
         return prefill_one
 
     def _make_admit(self):
+        quant = self._quant
+
         def admit(pool, tok, active, remaining, eos_ids, slot, row,
                   length, first_tok, n_remaining, eos_id):
+            if quant:
+                # the prefill row is float; encode it into the resident
+                # int8 + scales layout before the slot write
+                row = self._sq.quantize_kv(row)
             pool = pool_mod.write_slot(pool, slot, row, length)
             tok = jax.lax.dynamic_update_slice(
                 tok, first_tok.reshape(1, 1), (slot, 0))
@@ -263,13 +290,27 @@ class ServeEngine:
         sampler = self._sampler
         chunk = self.ecfg.decode_chunk
 
+        quant = self._quant
+
         def decode_chunk(params, pool, tok, active, remaining, eos_ids,
                          key):
             """``chunk`` model steps + sampling + termination as one
             program. Inactive slots keep stepping on their last token
             (their writes land in freed columns and are healed by the
             next ``write_slot``); ``emitted`` records which scan
-            iterations produced a real token per slot."""
+            iterations produced a real token per slot.
+
+            In int8 mode the weights are dequantized once per chunk and
+            the KV pool once per chunk boundary: the scan carries the
+            float pool (fp32 dequant is exact on the codes), and the
+            chunk's last state is re-encoded into the resident int8
+            layout — codes of untouched rows are stable across the
+            round trip (repro.lowp.serve_quant)."""
+            qpool = pool
+            if quant:
+                params = self._sq.dequantize_params(params)
+                pool = self._sq.dequantize_kv(pool)
+
             def body(carry, _):
                 pool, tok, active, remaining, key = carry
                 logits, new_pool = mod.decode_step(cfg, params, tok,
@@ -292,11 +333,21 @@ class ServeEngine:
                 body, (pool, tok, active, remaining, key), None,
                 length=chunk)
             pool, tok, active, remaining, key = carry
+            if quant:
+                pool = self._sq.requantize_kv(pool, like=qpool)
             return pool, tok, active, remaining, key, toks, emitted
 
         return decode_chunk
 
     # -- public API --------------------------------------------------------
+
+    def resident_bytes(self) -> Dict[str, int]:
+        """Bytes of the resident weight tree and KV pool (int8 mode
+        counts codes + scales) — the serve-memory number
+        ``benchmarks/precision_ladder.py`` reports."""
+        from repro.lowp.serve_quant import tree_bytes
+        return {"params": tree_bytes(self.params),
+                "pool": tree_bytes(self._pool)}
 
     def submit(self, req: Request) -> None:
         tp = len(req.prompt)

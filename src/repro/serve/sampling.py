@@ -39,8 +39,14 @@ def make_sampler(method: str = "greedy", temperature: float = 1.0,
         if method == "greedy":
             return jnp.argmax(lg, axis=-1).astype(jnp.int32)
         if method == "top_k":
-            kth = jax.lax.top_k(lg, top_k)[0][..., -1:]
-            lg = jnp.where(lg >= kth, lg, -jnp.inf)
+            # sample among the k top_k *indices*, not a >= kth-value
+            # threshold: a threshold keeps every logit tied with the
+            # k-th value, inflating the candidate set beyond top_k
+            vals, idx = jax.lax.top_k(lg, top_k)
+            choice = jax.random.categorical(
+                key, vals / temperature, axis=-1)
+            return jnp.take_along_axis(
+                idx, choice[..., None], axis=-1)[..., 0].astype(jnp.int32)
         return jax.random.categorical(
             key, lg / temperature, axis=-1).astype(jnp.int32)
 

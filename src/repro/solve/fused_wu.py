@@ -36,7 +36,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from repro.core import soi
+from repro.core import quantize, soi
 from repro.core.kfac import (
     KFACConfig,
     invert_blocks_flat,
@@ -130,7 +130,8 @@ def refresh_and_precondition(
         from repro.solve.block_solver import invert_factor_tree
         inv = invert_factor_tree(factors, cfg, mesh=mesh,
                                  plan=plan if distributed else None)
-        pre = precondition_pooled(grads_by_name, inv, wu_plan)
+        pre = precondition_pooled(grads_by_name, inv, wu_plan,
+                                  precision=cfg.precision)
         return inv, pre
 
     axes = mesh_axes(mesh)
@@ -168,15 +169,19 @@ def refresh_and_precondition(
         outs = []
         for grp, t, a_slot, sel, g_slot in zip(
                 wu_plan.groups, tiles, a_slot_r, sel_r, g_slot_r):
-            tmp = jnp.einsum("nab,nbc->nac",
-                             local_inv[grp.bi][a_slot[0]], t[0],
-                             preferred_element_type=jnp.float32)
+            # both WU VMMs run at cfg.precision (repro.lowp): "fp32"
+            # lowers to the historical einsums bitwise, matching the
+            # replicated pooled path at every knob setting
+            tmp = quantize.lowp_einsum(
+                "nab,nbc->nac", local_inv[grp.bi][a_slot[0]], t[0],
+                precision=cfg.precision)
             tmp_all = jax.lax.all_gather(
                 tmp[None], axis_name=axes, tiled=True)
             tmp_flat = tmp_all.reshape((-1,) + tmp_all.shape[2:])
-            o = jnp.einsum("nac,ncd->nad", tmp_flat[sel[0]],
-                           local_inv[grp.bo][g_slot[0]],
-                           preferred_element_type=jnp.float32)
+            o = quantize.lowp_einsum(
+                "nac,ncd->nad", tmp_flat[sel[0]],
+                local_inv[grp.bo][g_slot[0]],
+                precision=cfg.precision)
             outs.append(jax.lax.all_gather(
                 o[None], axis_name=axes, tiled=True))
         # 4. inverse shards for the optimizer state — gathered here,

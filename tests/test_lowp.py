@@ -1,0 +1,202 @@
+"""repro.lowp: the end-to-end low-precision mode.
+
+Three layers of contract:
+* ``lowp_einsum`` — the routing primitive every WU matmul goes
+  through (fp32 must stay *bitwise* the historical einsum; hilo/int
+  modes carry an accuracy budget);
+* ``update_parity`` — the ROADMAP acceptance number: >= 16 effective
+  bits on the preconditioned update at ``--precision hilo|int8``;
+* ``serve_quant`` — int8 resident weights + KV codes: exact embedding
+  skip, code-stable requantization, byte accounting.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantize import (
+    hilo_einsum,
+    int_slice_einsum,
+    lowp_einsum,
+    precision_kind,
+)
+from repro.lowp import serve_quant
+from repro.lowp.serve_quant import QTensor
+
+
+def _ab(m=64, k=96, n=48, seed=0):
+    rng = np.random.default_rng(seed)
+    return (jnp.asarray(rng.standard_normal((m, k)), jnp.float32),
+            jnp.asarray(rng.standard_normal((k, n)), jnp.float32))
+
+
+def _bits(out, ref):
+    err = np.max(np.abs(np.asarray(out, np.float64)
+                        - np.asarray(ref, np.float64)))
+    return -np.log2(err / np.max(np.abs(np.asarray(ref, np.float64))))
+
+
+class TestPrecisionSpec:
+    def test_kinds(self):
+        assert precision_kind("fp32") == "fp32"
+        assert precision_kind("hilo") == "hilo"
+        assert precision_kind("int8") == (24, 8)  # shipped alias
+        assert precision_kind("int16b4") == (16, 4)
+        assert precision_kind("int4b4") == (4, 4)
+
+    @pytest.mark.parametrize("bad", ["fp16", "int8b", "intxby", "",
+                                     "int0b4", "int8b0", "int4b8"])
+    def test_rejects(self, bad):
+        with pytest.raises(ValueError):
+            precision_kind(bad)
+
+
+class TestLowpEinsum:
+    def test_fp32_is_bitwise_the_historical_path(self):
+        a, b = _ab()
+        ref = jnp.einsum("mk,kn->mn", a, b,
+                         preferred_element_type=jnp.float32)
+        out = lowp_einsum("mk,kn->mn", a, b, precision="fp32")
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+    def test_hilo_budget(self):
+        a, b = _ab(seed=1)
+        ref = a @ b
+        assert _bits(hilo_einsum("mk,kn->mn", a, b), ref) >= 20.0
+
+    def test_int8_budget_and_ladder_order(self):
+        a, b = _ab(seed=2)
+        ref = a @ b
+        bits = {p: _bits(lowp_einsum("mk,kn->mn", a, b, precision=p),
+                         ref)
+                for p in ("int4b4", "int8b4", "int16b4", "int8")}
+        assert bits["int8"] >= 18.0          # 24-bit codes
+        assert bits["int16b4"] > bits["int8b4"] > bits["int4b4"]
+
+    def test_int_slice_exact_in_quantized_codes(self):
+        """Slice composition is *exact* in the quantized codes (the
+        ISAAC argument): the sliced product equals the full product of
+        the quantized operands — the only error in the mode is the
+        operand quantization itself, never the composition."""
+        from repro.core.quantize import amax_scale, quantize_fixed
+
+        rng = np.random.default_rng(3)
+        a = jnp.asarray(rng.standard_normal((16, 24)), jnp.float32)
+        b = jnp.asarray(rng.standard_normal((24, 8)), jnp.float32)
+        out = int_slice_einsum("mk,kn->mn", a, b,
+                               total_bits=8, slice_bits=4)
+        aq = quantize_fixed(a, 8, amax_scale(a))
+        bq = quantize_fixed(b, 8, amax_scale(b))
+        ref = np.asarray(aq, np.float64) @ np.asarray(bq, np.float64)
+        # composition is exact in the codes; the only residue is fp32
+        # rounding of the sa*sb rescale (~2**-23 of the output range)
+        np.testing.assert_allclose(
+            np.asarray(out), ref, rtol=0,
+            atol=float(np.max(np.abs(ref))) * 2.0 ** -19)
+
+    def test_batched_spec(self):
+        rng = np.random.default_rng(4)
+        a = jnp.asarray(rng.standard_normal((3, 8, 16)), jnp.float32)
+        b = jnp.asarray(rng.standard_normal((3, 16, 4)), jnp.float32)
+        ref = jnp.einsum("nab,nbc->nac", a, b)
+        for p in ("hilo", "int8"):
+            out = lowp_einsum("nab,nbc->nac", a, b, precision=p)
+            assert out.shape == ref.shape
+            assert _bits(out, ref) >= 16.0
+
+
+class TestUpdateParity:
+    """The acceptance criterion: >= 16 effective bits on the
+    preconditioned update vs the fp32 reference, from a warmed
+    (non-identity-inverse) state, on the smoke arch."""
+
+    @pytest.mark.parametrize("precision", ["hilo", "int8"])
+    def test_min_bits_budget(self, precision):
+        from repro.lowp import update_parity
+
+        r = update_parity(precision)
+        assert r["min_bits"] >= 16.0, r
+
+    def test_kernel_path_rejects_int_modes(self):
+        """The Pallas kernel IS the hilo scheme — integer-sliced modes
+        cannot compose with use_kernel and must fail loudly, not fall
+        back silently to a different precision."""
+        from repro.core import kfac
+
+        with pytest.raises(ValueError, match="use_kernel"):
+            kfac.precondition_pooled({}, {}, None, use_kernel=True,
+                                     precision="int8")
+        with pytest.raises(ValueError, match="use_kernel"):
+            kfac.precondition_pooled({}, {}, None, use_kernel=True,
+                                     precision="int16b4")
+
+
+class TestServeQuant:
+    def test_qtensor_roundtrip_codes(self):
+        rng = np.random.default_rng(5)
+        w = jnp.asarray(rng.standard_normal((32, 16)), jnp.float32)
+        qt = serve_quant._encode(w, axis=-2)
+        assert qt.q.dtype == jnp.int8
+        w2 = qt.q.astype(jnp.float32) * qt.scale
+        # dequant -> re-encode recovers the same codes (code-stable)
+        qt2 = serve_quant._encode(w2, axis=-2)
+        np.testing.assert_array_equal(np.asarray(qt.q),
+                                      np.asarray(qt2.q))
+        # and the dequant error is within half a quantization step
+        step = np.asarray(qt.scale)
+        assert np.all(np.abs(np.asarray(w2 - w)) <= step / 2 + 1e-7)
+
+    def test_quantize_params_skips_embed_and_vectors(self):
+        params = {
+            "embed": jnp.ones((8, 4)),
+            "layers": {"wq": jnp.ones((4, 4)), "ln1": jnp.ones((4,))},
+        }
+        q = serve_quant.quantize_params(params)
+        assert not isinstance(q["embed"], QTensor)
+        assert not isinstance(q["layers"]["ln1"], QTensor)
+        assert isinstance(q["layers"]["wq"], QTensor)
+        d = serve_quant.dequantize_params(q)
+        np.testing.assert_allclose(np.asarray(d["layers"]["wq"]),
+                                   np.ones((4, 4)), atol=1e-6)
+
+    def test_zero_leaf_safe(self):
+        q = serve_quant.quantize_params({"w": jnp.zeros((4, 4))})
+        d = serve_quant.dequantize_params(q)
+        np.testing.assert_array_equal(np.asarray(d["w"]),
+                                      np.zeros((4, 4)))
+
+    def test_kv_roundtrip_and_code_stability(self):
+        rng = np.random.default_rng(6)
+        pool = {"layers": {
+            "k": jnp.asarray(rng.standard_normal((2, 3, 4, 8, 5)),
+                             jnp.bfloat16),
+            "v": jnp.asarray(rng.standard_normal((2, 3, 4, 8, 5)),
+                             jnp.bfloat16),
+            "pos": jnp.zeros((3, 8), jnp.int32)},
+            "idx": jnp.zeros((3,), jnp.int32)}
+        q = serve_quant.quantize_kv(pool)
+        assert q["layers"]["k"].dtype == jnp.int8
+        assert q["layers"]["k_scale"].shape == (2, 3, 4, 8)
+        assert q["layers"]["pos"].dtype == jnp.int32
+        f = serve_quant.dequantize_kv(q)
+        assert "k_scale" not in f["layers"]
+        # fp32 dequant -> requant keeps every code (decode chunks must
+        # not drift rows they didn't write)
+        q2 = serve_quant.requantize_kv(f, like=q)
+        np.testing.assert_array_equal(np.asarray(q2["layers"]["k"]),
+                                      np.asarray(q["layers"]["k"]))
+        np.testing.assert_array_equal(np.asarray(q2["layers"]["v"]),
+                                      np.asarray(q["layers"]["v"]))
+        # dtype contract restored for non-KV leaves
+        assert q2["layers"]["pos"].dtype == jnp.int32
+        # dequantizing an already-float pool is the identity
+        same = serve_quant.dequantize_kv(pool)
+        assert same["layers"]["k"] is pool["layers"]["k"]
+
+    def test_tree_bytes(self):
+        t = {"a": jnp.zeros((4, 4), jnp.float32),
+             "b": QTensor(jnp.zeros((4, 4), jnp.int8),
+                          jnp.zeros((1, 4), jnp.float32))}
+        assert serve_quant.tree_bytes(t) == 64 + 16 + 16

@@ -80,6 +80,54 @@ class TestQuantize:
         # two bf16 limbs carry ~16 mantissa bits
         assert np.max(np.abs(rec - x)) <= np.max(np.abs(x)) * 2.0 ** -15
 
+    @given(total=st.sampled_from([7, 8, 12, 16]),
+           sl=st.sampled_from([3, 4, 8]))
+    @settings(max_examples=20, deadline=None)
+    def test_bit_slices_roundtrip_full_code_range(self, total, sl):
+        """Every representable code — including both saturation
+        endpoints — survives slice -> reconstruct exactly.
+
+        Regression: the quantizer used to clip codes to [-2**T, 2**T-1]
+        (asymmetric two's-complement bounds), but code -2**T needs T+1
+        magnitude bits and the ceil(T/S) slices silently dropped its
+        top bit: a saturated-negative input reconstructed as ~0."""
+        from repro.core.quantize import quantize_int
+
+        qmax = 2 ** total - 1
+        codes = np.unique(np.concatenate([
+            np.arange(-qmax, -qmax + 64),          # negative saturation
+            np.arange(-32, 33),                    # around zero
+            np.arange(qmax - 63, qmax + 1),        # positive saturation
+            np.linspace(-qmax, qmax, 257).round(),
+        ])).astype(np.float32)
+        x = jnp.asarray(codes * 2.0 ** -total)
+        slices = bit_slices_fixed(x, total, sl, jnp.float32(1.0))
+        rec = reconstruct_slices(slices, total, sl, jnp.float32(1.0))
+        np.testing.assert_array_equal(
+            np.asarray(rec), np.asarray(quantize_fixed(
+                x, total, jnp.float32(1.0))))
+        # exact code-level identity, endpoints included
+        np.testing.assert_array_equal(
+            np.asarray(rec) * 2.0 ** total, codes)
+        assert np.all(np.abs(np.asarray(quantize_int(
+            x, total, jnp.float32(1.0)))) <= qmax)
+
+    def test_quantize_saturates_symmetrically(self):
+        """Inputs beyond the grid clip to +-(2**T - 1) codes — never to
+        the unrepresentable -2**T."""
+        from repro.core.quantize import quantize_int
+
+        x = jnp.asarray([-10.0, -1.0, -1.0 + 2.0 ** -9, 1.0, 10.0])
+        q = np.asarray(quantize_int(x, 8, jnp.float32(1.0)))
+        np.testing.assert_array_equal(q, [-255.0, -255.0, -255.0,
+                                          255.0, 255.0])
+        slices = bit_slices_fixed(x, 8, 4, jnp.float32(1.0))
+        rec = np.asarray(reconstruct_slices(slices, 8, 4,
+                                            jnp.float32(1.0)))
+        np.testing.assert_array_equal(
+            rec, np.asarray([-255.0, -255.0, -255.0, 255.0, 255.0])
+            * 2.0 ** -8)
+
     def test_hilo_matmul_accuracy(self):
         rng = np.random.default_rng(2)
         a = rng.standard_normal((128, 256)).astype(np.float32)
@@ -211,6 +259,64 @@ class TestFaithfulInv:
         # Eqn 10: N(2*ceil(Qb/Rdac)*ceil(Qx/Radc) + ceil(Qx/Rdac))
         assert cfg.cycles_inv() == 18 * (2 * 4 * 2 + 4)
         assert cfg.cycles_inv_fused() == 18 * (2 * 4 * 2 + 2 * 4)
+
+    def test_loop_b_saturated_rhs_regression(self):
+        """Regression: a rhs component that saturates the DAC grid
+        (code -2**q_b before the clip) used to reconstruct as ~0 — the
+        asymmetric clip admitted a code whose top bit the R_DAC slices
+        dropped — and Loop x could never recover it because the
+        residual re-saturated at every rescale. With the symmetric
+        clip the slice sum reproduces the full saturated magnitude."""
+        import scipy.linalg as sla
+
+        from repro.core.precision_inv import _loop_b_solve
+
+        cfg = CircuitConfig()
+        n = 16
+        lu = sla.lu_factor(np.eye(n))
+        r = np.zeros(n)
+        r[0] = -1.0  # rhs_scale=1.0: code -2**q_b pre-clip
+        x = _loop_b_solve(lu, r, cfg, 1.0)
+        # identity system: x == clipped rhs, so x[0] ~ -(1 - 2**-q_b)
+        assert abs(x[0] - (-(1.0 - 2.0 ** -cfg.q_b))) < 2.0 ** -12
+        assert np.all(x[1:] == 0.0)
+
+    def test_faithful_inv_saturating_rhs(self):
+        """End-to-end: a solve whose rhs has DAC-saturating components
+        still reaches the accuracy budget (it silently lost ~all bits
+        of those components before the symmetric clip)."""
+        rng = np.random.default_rng(11)
+        A, _ = _damped_gram(rng, 64)
+        b = rng.standard_normal(64)
+        b[0] = -np.max(np.abs(b)) * 4  # dominates _pow2_range -> code -2**q_b
+        cfg = CircuitConfig()
+        Aq, bq = quantize_problem(A, b, cfg)
+        x = faithful_inv_apply(A, b, cfg)
+        assert achieved_bits(x, np.linalg.solve(Aq, bq)) >= 13.0
+
+
+# ---------------------------------------------------------------------------
+# The training-precision ladder (Fig. 4(b) at trajectory scale)
+# ---------------------------------------------------------------------------
+
+class TestTrajectoryLadder:
+    def test_slice_width_orders_trajectory_accuracy(self):
+        """Multi-step training trajectories at 4/8/16-bit total code
+        width (4-bit slices) vs the fp32 trajectory: more slices
+        composed -> strictly more achieved bits at every step — the
+        paper's Loop-b composition claim at trajectory scale."""
+        from repro.lowp import trajectory_parity
+
+        bits = {p: trajectory_parity(p, steps=2)["bits"]
+                for p in ("int4b4", "int8b4", "int16b4")}
+        for step in range(2):
+            assert bits["int16b4"][step] > bits["int8b4"][step] > \
+                bits["int4b4"][step], bits
+        # the 16-bit rung tracks fp32 closely at step 1; the 4-bit rung
+        # is structurally useless for training (the paper's motivation
+        # for composing slices at all)
+        assert bits["int16b4"][0] >= 10.0, bits
+        assert bits["int4b4"][0] <= 6.0, bits
 
 
 # ---------------------------------------------------------------------------
