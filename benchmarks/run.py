@@ -118,6 +118,7 @@ def main(argv=None):
         precision_ladder,
         roofline,
         serve_engine,
+        serve_scale,
         soi_precision,
         soi_sizes,
         speedup,
@@ -174,6 +175,14 @@ def main(argv=None):
     run("wu_fusion", lambda: wu_fusion.main([]))
     # continuous-batching engine vs static decode (CPU-local)
     run("serve_engine", lambda: serve_engine.main([]))
+
+    # paged KV pool + prefix cache vs the slot pool at equal cache
+    # bytes; writes BENCH_serve_scale.json
+    def _ss():
+        score(serve_scale.headline(serve_scale.main(
+            ["--fast"] if args.fast else [])))
+
+    run("serve_scale", _ss)
 
     # the precision ladder (Fig. 4(b) -> full trajectories + int8
     # serving); writes BENCH_precision.json. --fast drops the

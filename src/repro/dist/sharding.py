@@ -219,3 +219,28 @@ def pool_sharding(pool: Any, mesh) -> Any:
     cache — KV slots over (pod, data), heads over ``model`` — plus the
     per-slot length vector (``idx``, (max_slots,)) over (pod, data)."""
     return cache_sharding(pool, mesh)
+
+
+def paged_pool_sharding(pool: Any, mesh) -> Any:
+    """Block-paged pool sharding (repro.serve.paged).
+
+    KV leaves are ``(L, n_blocks, bl, H, hd)``: heads ride ``model``
+    (model-parallel serving, same split as the slot pool); the block
+    dim REPLICATES on purpose — block tables address arbitrary blocks,
+    so a sharded block dim would turn every decode gather/scatter into
+    a cross-device collective (and the CPU SPMD partitioner is known to
+    mis-lower shard hints around such gathers — EXPERIMENTS.md §Perf).
+    Int8 sibling scales ``(L, nb, bl, H)`` follow their parent's head
+    dim. Bookkeeping (table/free/idx/n_mapped, int32) replicates."""
+    def one(path, leaf):
+        key = path_key(path)
+        base = key.rsplit("/", 1)[-1]
+        nd = len(leaf.shape)
+        spec = [None] * nd
+        if base in ("k", "v") and nd >= 4:
+            spec[nd - 2] = MODEL               # (L, nb, bl, H, hd)
+        elif base in ("k_scale", "v_scale") and nd >= 3:
+            spec[nd - 1] = MODEL               # (L, nb, bl, H)
+        return _sharding(mesh, tuple(spec), leaf.shape)
+
+    return jax.tree_util.tree_map_with_path(one, pool)

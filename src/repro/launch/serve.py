@@ -37,6 +37,8 @@ from repro.launch import steps as steps_mod
 from repro.launch.mesh import make_dev_mesh
 from repro.serve import (
     EngineConfig,
+    PagedConfig,
+    PagedServeEngine,
     Request,
     ServeEngine,
     synthetic_trace,
@@ -84,6 +86,21 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--decode-chunk", type=int, default=8)
     ap.add_argument("--max-len", type=int, default=0,
                     help="engine pool columns (0: prompt-len + gen)")
+    # paged engine path
+    ap.add_argument("--paged", action="store_true",
+                    help="engine path: block-paged KV pool "
+                         "(repro.serve.paged) — dense/moe only")
+    ap.add_argument("--block-len", type=int, default=16,
+                    help="--paged: positions per KV block "
+                         "(max-len must be a multiple)")
+    ap.add_argument("--kv-blocks", type=int, default=0,
+                    help="--paged: physical pool blocks (0: "
+                         "max-slots * max-len / block-len, i.e. the "
+                         "slot engine's footprint)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="--paged: shared-prefix cache (repeated "
+                         "prompt prefixes prefill once, blocks are "
+                         "refcount-shared copy-on-write)")
     return ap
 
 
@@ -102,14 +119,25 @@ def _trace(cfg, args):
 def serve_engine(cfg, args, mesh):
     mod = steps_mod.model_module(cfg)
     max_len = args.max_len or (args.prompt_len + args.gen)
+    if args.paged:
+        # the paged pool addresses whole blocks: round the column
+        # budget up to a block multiple
+        bl = args.block_len
+        max_len = (max_len + bl - 1) // bl * bl
     with jax.set_mesh(mesh):
         params = mod.init(cfg, jax.random.PRNGKey(args.seed))
         params = jax.device_put(
             params, shard_rules.param_sharding(params, mesh))
-        eng = ServeEngine(cfg, params, EngineConfig(
-            max_slots=args.max_slots, max_len=max_len,
-            decode_chunk=args.decode_chunk, seed=args.seed,
-            quant=args.quant, **sampling_args(args)), mesh=mesh)
+        common = dict(max_slots=args.max_slots, max_len=max_len,
+                      decode_chunk=args.decode_chunk, seed=args.seed,
+                      quant=args.quant, **sampling_args(args))
+        if args.paged:
+            eng = PagedServeEngine(cfg, params, PagedConfig(
+                block_len=args.block_len, n_blocks=args.kv_blocks,
+                prefix_cache=args.prefix_cache, **common), mesh=mesh)
+        else:
+            eng = ServeEngine(cfg, params, EngineConfig(**common),
+                              mesh=mesh)
         reqs, arrivals = _trace(cfg, args)
         if args.warmup:
             # compile the decode chunk + every prefill bucket the trace
@@ -149,6 +177,17 @@ def serve_engine(cfg, args, mesh):
         "tok_per_s": n_tok / max(wall, 1e-9),
         "sample_tokens": done[0].tokens[:8] if 0 in done else [],
     }
+    if args.paged:
+        summary.update({
+            "mode": "engine-paged",
+            "block_len": args.block_len,
+            "kv_blocks": eng._n_blocks,
+            "prefill_tokens": st["prefill_tokens"],
+            "prefix_hits": st["prefix_hits"],
+            "prefix_hit_tokens": st["prefix_hit_tokens"],
+            "preemptions": st["preemptions"],
+            "evictions": st["evictions"],
+        })
     return summary, done
 
 

@@ -150,20 +150,48 @@ def dequantize_kv(pool: Any, dtype=jnp.float32) -> Any:
     return _walk_kv(pool, deq)
 
 
-def requantize_kv(new_pool: Any, like: Any) -> Any:
+def requantize_kv(new_pool: Any, like: Any, dirty=None) -> Any:
     """Float KV tree from ``decode_step`` -> resident int8 layout.
 
     ``like`` is the previous resident pool: its dtypes restore the
     non-KV leaves (the engine's historical dtype contract), its
     structure says which scale siblings to rebuild. Untouched rows
     keep their codes exactly (code-stable requantization, see module
-    docstring)."""
+    docstring).
 
-    def req(kv, _scale, _key):
-        qt = _encode(kv, axis=-1)
-        return qt.q, qt.scale[..., 0]
+    ``dirty`` (optional bool vector) marks the written entries of the
+    pool's axis-1 (the slot axis of a scan-stacked ``(L, B, S, ...)``
+    slot pool, or the block axis of a ``(L, n_blocks, bl, ...)`` paged
+    pool): clean entries carry their previous codes *and scales*
+    bitwise from ``like`` — an O(pool) select instead of relying on the
+    code-stability of a full re-encode, and the requant's encode cost
+    tracks the chunk's write set, not the pool size."""
 
-    out = _walk_kv(new_pool, req)
+    def walk(node, ref):
+        if not isinstance(node, dict):
+            return node
+        out = {}
+        for key, val in node.items():
+            if key.endswith("_scale"):
+                continue  # rebuilt with its parent leaf
+            if isinstance(val, dict):
+                out[key] = walk(val, ref[key])
+            elif (key.split("/")[-1] in ("k", "v")
+                    and key + "_scale" in ref):
+                qt = _encode(val, axis=-1)
+                q, s = qt.q, qt.scale[..., 0]
+                if dirty is not None:
+                    mq = dirty.reshape((1, -1) + (1,) * (q.ndim - 2))
+                    ms = dirty.reshape((1, -1) + (1,) * (s.ndim - 2))
+                    q = jnp.where(mq, q, ref[key])
+                    s = jnp.where(ms, s, ref[key + "_scale"])
+                out[key] = q
+                out[key + "_scale"] = s
+            else:
+                out[key] = val
+        return out
+
+    out = walk(new_pool, like)
     return jax.tree.map(
         lambda n, o: n if n.dtype == o.dtype else n.astype(o.dtype),
         out, like)

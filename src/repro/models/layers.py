@@ -21,6 +21,11 @@ import jax.numpy as jnp
 from repro.core import soi
 from repro.dist.api import BATCH_AXES, DATA, MODEL, shard_hint
 
+#: far-future sentinel position: the causal mask (q_pos >= kv_pos)
+#: excludes cache columns carrying it. Lives here (the lowest layer that
+#: knows about position tracks); repro.serve.pool re-exports it.
+UNWRITTEN_POS = 2 ** 30
+
 
 @dataclasses.dataclass
 class Ctx:
@@ -272,6 +277,60 @@ def pos_cache_update(cache_pos, q_pos, idx):
 
 
 # ---------------------------------------------------------------------------
+# Paged KV (block-table indirection for the serving pool)
+# ---------------------------------------------------------------------------
+#
+# The paged pool stores KV in fixed-size position blocks:
+#   k/v : (n_blocks, block_len, Hkv, hd)     pos : (n_blocks, block_len)
+# and each batch row owns a block table (B, nbps) of physical block ids,
+# where table entry j covers absolute positions [j*bl, (j+1)*bl).  The
+# sentinel id ``n_blocks`` means "unmapped": reads fill pos with
+# UNWRITTEN_POS (masked by the causal mask, exactly like unwritten slot
+# columns) and writes drop.  Virtual column c of the gathered cache is
+# absolute position c — the same column ordering as the dense slot
+# layout, which is what makes paged decode bitwise the slot decode.
+
+def paged_kv_read(cache_k, cache_v, cache_pos, table):
+    """Gather per-row virtual KV rows from the block pool.
+
+    cache_k/v: (n_blocks, bl, Hkv, hd); cache_pos: (n_blocks, bl);
+    table: (B, nbps) int32 with ``n_blocks`` as the unmapped sentinel.
+    Returns k/v (B, nbps*bl, Hkv, hd) and kv_pos (B, nbps*bl)."""
+    B, nbps = table.shape
+    bl = cache_k.shape[1]
+    kg = jnp.take(cache_k, table, axis=0, mode="fill", fill_value=0)
+    vg = jnp.take(cache_v, table, axis=0, mode="fill", fill_value=0)
+    pg = jnp.take(cache_pos, table, axis=0, mode="fill",
+                  fill_value=UNWRITTEN_POS)
+    kg = kg.reshape(B, nbps * bl, *cache_k.shape[2:])
+    vg = vg.reshape(B, nbps * bl, *cache_v.shape[2:])
+    return kg, vg, pg.reshape(B, nbps * bl)
+
+
+def paged_kv_write(cache_k, cache_v, cache_pos, table, k, v, q_pos, idx):
+    """Per-row decode write into the block pool (t == 1).
+
+    k/v: (B, 1, Hkv, hd); q_pos: (B, 1); idx: (B,) absolute positions.
+    Rows whose table entry for ``idx`` is unmapped (or whose idx is past
+    the table) write nothing — mirroring the ``idx >= S`` drop of the
+    dense slot path."""
+    n_blocks, bl = cache_k.shape[0], cache_k.shape[1]
+    nbps = table.shape[1]
+    rows = jnp.arange(table.shape[0])
+    col = idx // bl
+    blk = jnp.where(col < nbps,
+                    table[rows, jnp.minimum(col, nbps - 1)], n_blocks)
+    off = idx % bl
+    ck = cache_k.at[blk, off].set(
+        k[:, 0].astype(cache_k.dtype), mode="drop")
+    cv = cache_v.at[blk, off].set(
+        v[:, 0].astype(cache_v.dtype), mode="drop")
+    cp = cache_pos.at[blk, off].set(
+        q_pos[:, 0].astype(cache_pos.dtype), mode="drop")
+    return ck, cv, cp
+
+
+# ---------------------------------------------------------------------------
 # Activations / misc
 # ---------------------------------------------------------------------------
 
@@ -285,18 +344,38 @@ def gelu(x: jax.Array) -> jax.Array:
 
 def causal_conv1d(x: jax.Array, w: jax.Array,
                   b: Optional[jax.Array] = None,
-                  state: Optional[jax.Array] = None):
+                  state: Optional[jax.Array] = None,
+                  length: Optional[jax.Array] = None):
     """Depthwise causal conv along time. x: (B, T, C); w: (C, W).
 
     If ``state`` (B, W-1, C) is given (decode), it is the left context and
-    the updated state is returned alongside."""
+    the updated state is returned alongside.  ``length`` (B,) marks the
+    per-row valid prefix of a right-padded prefill: the returned state is
+    then the window ending at position ``length-1`` (column ``length-1``
+    of the padded input) rather than at the padded tail — padding past
+    ``length`` never leaks into decode.  The conv *outputs* need no
+    masking: causality means columns < length only see columns < length.
+    """
     W = w.shape[-1]
     if state is not None:
         xin = jnp.concatenate([state.astype(x.dtype), x], axis=1)
-        new_state = xin[:, -(W - 1):, :] if W > 1 else state
     else:
         xin = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
-        new_state = None
+    if state is None and length is None:
+        new_state = None                      # training: no state carried
+    elif W > 1:
+        if length is not None:
+            # xin column (length + i) holds position (length - W + 1 + i):
+            # the left context of position `length` — the first decode
+            # step after a prefill of `length` valid tokens.
+            cols = length[:, None] + jnp.arange(W - 1)[None, :]
+            new_state = jnp.take_along_axis(
+                xin, cols[:, :, None], axis=1).astype(
+                    state.dtype if state is not None else x.dtype)
+        else:
+            new_state = xin[:, -(W - 1):, :]
+    else:
+        new_state = state
     out = jnp.zeros_like(x, dtype=jnp.float32)
     T = x.shape[1]
     for i in range(W):

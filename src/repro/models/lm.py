@@ -37,12 +37,15 @@ from repro.models import moe as moe_mod
 from repro.models import rglru as rglru_mod
 from repro.models import ssm as ssm_mod
 from repro.models.layers import (
+    UNWRITTEN_POS,
     Ctx,
     apply_rope,
     attention,
     cast,
     dense,
     kv_cache_update,
+    paged_kv_read,
+    paged_kv_write,
     pos_cache_update,
     rms_norm,
     shard_acts,
@@ -165,9 +168,12 @@ def init(cfg, key) -> Dict:
 # ---------------------------------------------------------------------------
 
 def _attn_block(cfg, p, x, positions, ctx, prefix, *, window=0,
-                cache=None, idx=None, mrope=False):
+                cache=None, idx=None, mrope=False, table=None):
     """Pre-norm attention sub-layer. cache: dict(k, v, pos) slices for
-    this layer or None. Returns (x + attn_out, new_cache)."""
+    this layer or None. ``table`` (B, nbps) switches the cache to the
+    block-paged layout (repro.serve.paged): k/v/pos leaves are
+    (n_blocks, block_len, ...) pools indirected per row through the
+    table. Returns (x + attn_out, new_cache)."""
     B, T, D = x.shape
     h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
     xin = rms_norm(x, p["ln1"], cfg.norm_eps)
@@ -198,7 +204,25 @@ def _attn_block(cfg, p, x, positions, ctx, prefix, *, window=0,
 
     q_pos = positions[0] if positions.ndim == 3 else positions
     new_cache = None
-    if cache is not None and T > 1 and window and T > cache["k"].shape[1]:
+    if cache is not None and table is not None:
+        # block-paged decode: per-row scatter into the block pool, then a
+        # table-gather back to the virtual (B, nbps*bl) cache whose
+        # column c is absolute position c — the same column ordering as
+        # the dense slot layout, so attention is bitwise the slot path.
+        if T != 1:
+            raise NotImplementedError(
+                "paged cache is decode-only (T == 1); prefill runs on a "
+                "dense row and is scattered in by write_slot_paged")
+        if window:
+            raise NotImplementedError(
+                "paged cache does not support windowed rings")
+        ck, cv, cpos = paged_kv_write(
+            cache["k"], cache["v"], cache["pos"], table, k, v, q_pos, idx)
+        k_all, v_all, kv_pos = paged_kv_read(ck, cv, cpos, table)
+        k_all = k_all.astype(q.dtype)
+        v_all = v_all.astype(q.dtype)
+        new_cache = {"k": ck, "v": cv, "pos": cpos}
+    elif cache is not None and T > 1 and window and T > cache["k"].shape[1]:
         # Windowed prefill longer than the ring: attend in-sequence, then
         # store only the last S tokens rolled to their ring slots
         # (invariant: pos p lives at slot p % S).
@@ -251,30 +275,37 @@ def _mlp_block(cfg, p, x, ctx, prefix):
 
 
 def _layer_apply(cfg, kind, p, x, positions, ctx, prefix, cache=None,
-                 idx=None):
-    """One decoder layer of the given kind. Returns (x, new_cache)."""
+                 idx=None, table=None, state_len=None):
+    """One decoder layer of the given kind. Returns (x, new_cache).
+
+    ``state_len`` (B,) is the per-row valid prefix of a right-padded
+    prefill: recurrent mixers gather their carried state at position
+    state_len-1 instead of the padded tail (attention needs no such care
+    — unwritten columns carry UNWRITTEN_POS and are mask-excluded)."""
     if kind in ("attn", "local"):
         window = cfg.window if kind == "local" else 0
         x, nc = _attn_block(cfg, p, x, positions, ctx, prefix,
                             window=window, cache=cache, idx=idx,
-                            mrope=(cfg.family == "vlm"))
+                            mrope=(cfg.family == "vlm"), table=table)
         x = _mlp_block(cfg, p, x, ctx, prefix)
         return x, nc
     if kind == "moe":
         x, nc = _attn_block(cfg, p, x, positions, ctx, prefix,
-                            cache=cache, idx=idx)
+                            cache=cache, idx=idx, table=table)
         xin = rms_norm(x, p["ln2"], cfg.norm_eps)
         x = x + moe_mod.moe_ffn(cfg, p["moe"], xin, ctx, f"{prefix}/moe")
         return x, nc
     if kind == "mamba":
         xin = rms_norm(x, p["ln1"], cfg.norm_eps)
         y, nstate = ssm_mod.mamba_mixer(cfg, p["mamba"], xin, ctx,
-                                        f"{prefix}/mamba", state=cache)
+                                        f"{prefix}/mamba", state=cache,
+                                        length=state_len)
         return x + y, nstate
     if kind == "rec":
         xin = rms_norm(x, p["ln1"], cfg.norm_eps)
         y, nstate = rglru_mod.rglru_mixer(cfg, p["rec"], xin, ctx,
-                                          f"{prefix}/rec", state=cache)
+                                          f"{prefix}/rec", state=cache,
+                                          length=state_len)
         x = x + y
         x = _mlp_block(cfg, p, x, ctx, prefix)
         return x, nstate
@@ -324,7 +355,7 @@ def _logits(cfg, params, x):
 
 
 def _scan_layers(cfg, params, x, positions, taps, collect, cache, idx,
-                 train):
+                 train, table=None, state_len=None):
     """Run all layers; returns (x, stats, new_cache)."""
     stats_out: Dict[str, jax.Array] = {}
 
@@ -337,7 +368,8 @@ def _scan_layers(cfg, params, x, positions, taps, collect, cache, idx,
             ctx = Ctx(taps=taps_l or None, collect=collect,
                       soi_block=cfg.soi_block)
             xnew, ncache = _layer_apply(cfg, kind, p_l, xcur, positions,
-                                        ctx, prefix, cache=cache_l, idx=idx)
+                                        ctx, prefix, cache=cache_l, idx=idx,
+                                        table=table, state_len=state_len)
             if cache_l is None:
                 ncache = None     # train: don't stack states as ys
             return xnew, (ctx.stats, ncache)
@@ -368,7 +400,8 @@ def _scan_layers(cfg, params, x, positions, taps, collect, cache, idx,
                 c_i = cache_u.get(f"sub{i}") if cache_u else None
                 xcur, nc = _layer_apply(cfg, kind, p_u[f"sub{i}"], xcur,
                                         positions, ctx, f"units/sub{i}",
-                                        cache=c_i, idx=idx)
+                                        cache=c_i, idx=idx,
+                                        state_len=state_len)
                 stats.update(ctx.stats)
                 if nc is not None:
                     ncaches[f"sub{i}"] = nc
@@ -388,7 +421,7 @@ def _scan_layers(cfg, params, x, positions, taps, collect, cache, idx,
             c_i = tail_caches.get(f"sub{i}") if tail_caches else None
             x, nc = _layer_apply(cfg, kind, params["tail"][f"sub{i}"], x,
                                  positions, ctx, f"tail/sub{i}",
-                                 cache=c_i, idx=idx)
+                                 cache=c_i, idx=idx, state_len=state_len)
             stats_out.update(ctx.stats)
             if nc is not None:
                 ncache_tail[f"sub{i}"] = nc
@@ -413,8 +446,11 @@ def forward(cfg, params, batch, taps=None, collect=False, cache=None,
     the last real token sits before the padded tail).
 
     ``cache["idx"]`` is a scalar for static decode, or a (B,) per-slot
-    length vector for the serving pool (repro.serve)."""
+    length vector for the serving pool (repro.serve). ``cache["table"]``
+    (B, nbps), if present, switches attention to the block-paged layout
+    (repro.serve.paged); the table itself is carried through unchanged."""
     idx = cache["idx"] if cache is not None else None
+    table = cache.get("table") if cache is not None else None
     if "positions" in batch:
         positions = batch["positions"]
     else:
@@ -424,9 +460,17 @@ def forward(cfg, params, batch, taps=None, collect=False, cache=None,
             base = base + (idx[:, None] if idx.ndim == 1 else idx)
         positions = jnp.broadcast_to(base, (B, T))
 
+    # a padded prefill (per-row last_pos on a multi-token batch) tells
+    # recurrent mixers where each row's real prefix ends
+    state_len = None
+    if (cache is not None and last_pos is not None
+            and batch["tokens"].shape[1] > 1):
+        state_len = jnp.asarray(last_pos) + 1
+
     x = _embed(cfg, params, batch, positions)
     x, stats, new_cache = _scan_layers(
-        cfg, params, x, positions, taps, collect, cache, idx, train)
+        cfg, params, x, positions, taps, collect, cache, idx, train,
+        table=table, state_len=state_len)
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
     if last_only:
         x = x[:, -1:]
@@ -436,6 +480,8 @@ def forward(cfg, params, batch, taps=None, collect=False, cache=None,
     logits = _logits(cfg, params, x)
     if new_cache is not None:
         new_cache["idx"] = idx + batch["tokens"].shape[1]
+        if table is not None:
+            new_cache["table"] = table
     return logits, stats, new_cache
 
 
@@ -557,7 +603,7 @@ def init_cache(cfg, batch: int, seq_len: int, dtype=jnp.bfloat16) -> Dict:
         return {
             "k": jnp.zeros((batch, S, kv, hd), dtype),
             "v": jnp.zeros((batch, S, kv, hd), dtype),
-            "pos": jnp.full((batch, S), 2 ** 30, jnp.int32),
+            "pos": jnp.full((batch, S), UNWRITTEN_POS, jnp.int32),
         }
 
     if cfg.family == "hybrid":

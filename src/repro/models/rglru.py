@@ -46,8 +46,11 @@ def init_rglru(cfg, key) -> Dict:
 
 def rglru_mixer(cfg, p: Dict, x: jax.Array, ctx: Optional[Ctx],
                 prefix: str,
-                state: Optional[Tuple[jax.Array, jax.Array]] = None):
-    """x: (B, T, D); state: (h (B, lw), conv (B, W-1, lw)). Returns
+                state: Optional[Tuple[jax.Array, jax.Array]] = None,
+                length: Optional[jax.Array] = None):
+    """x: (B, T, D); state: (h (B, lw), conv (B, W-1, lw)). ``length``
+    (B,): valid prefix of a right-padded prefill — the returned state is
+    the one at position length-1, not at the padded tail. Returns
     (y (B, T, D), new_state)."""
     B, T, D = x.shape
 
@@ -59,7 +62,8 @@ def rglru_mixer(cfg, p: Dict, x: jax.Array, ctx: Optional[Ctx],
     h0 = conv0 = None
     if state is not None:
         h0, conv0 = state
-    xc, conv1 = causal_conv1d(xb, p["conv_w"], p["conv_b"], state=conv0)
+    xc, conv1 = causal_conv1d(xb, p["conv_w"], p["conv_b"], state=conv0,
+                              length=length if T > 1 else None)
 
     r = jax.nn.sigmoid(dense(xc, p["w_a"], f"{prefix}/w_a", ctx)
                        .astype(jnp.float32))
@@ -84,7 +88,11 @@ def rglru_mixer(cfg, p: Dict, x: jax.Array, ctx: Optional[Ctx],
         if h0 is not None:
             gated = gated.at[:, 0].add(a[:, 0] * h0)
         _, hs = jax.lax.associative_scan(comb, (a, gated), axis=1)
-        new_h = hs[:, -1]
+        if length is not None:
+            new_h = jnp.take_along_axis(
+                hs, (length - 1)[:, None, None], axis=1)[:, 0]
+        else:
+            new_h = hs[:, -1]
 
     y = (hs.astype(x.dtype) * gb)
     out = dense(y, p["out"], f"{prefix}/out", ctx)

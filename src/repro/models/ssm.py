@@ -54,9 +54,14 @@ def _ssm_params(cfg, p, xc, prefix, ctx):
 
 def mamba_mixer(cfg, p: Dict, x: jax.Array, ctx: Optional[Ctx],
                 prefix: str,
-                state: Optional[Tuple[jax.Array, jax.Array]] = None):
+                state: Optional[Tuple[jax.Array, jax.Array]] = None,
+                length: Optional[jax.Array] = None):
     """x: (B, T, D). ``state``: (h (B, di, n), conv (B, W-1, di)) for
-    decode. Returns (y, new_state)."""
+    decode. ``length`` (B,) marks the valid prefix of a right-padded
+    prefill: the returned state is then the recurrent state *at*
+    position length-1, not at the padded tail (causality means the scan
+    values at columns < length are pad-independent; only the boundary
+    gather needs care). Returns (y, new_state)."""
     B, T, D = x.shape
     di, n = cfg.d_inner, cfg.ssm_state
 
@@ -67,7 +72,8 @@ def mamba_mixer(cfg, p: Dict, x: jax.Array, ctx: Optional[Ctx],
     h0 = conv0 = None
     if state is not None:
         h0, conv0 = state
-    xc, conv1 = causal_conv1d(xin, p["conv_w"], p["conv_b"], state=conv0)
+    xc, conv1 = causal_conv1d(xin, p["conv_w"], p["conv_b"], state=conv0,
+                              length=length if T > 1 else None)
     xc = jax.nn.silu(xc.astype(jnp.float32)).astype(x.dtype)
 
     dt, bmat, cmat = _ssm_params(cfg, p, xc, prefix, ctx)
@@ -91,7 +97,11 @@ def mamba_mixer(cfg, p: Dict, x: jax.Array, ctx: Optional[Ctx],
         if h0 is not None:
             bx = bx.at[:, 0].add(ab[:, 0] * h0)
         _, hs = jax.lax.associative_scan(comb, (ab, bx), axis=1)
-        new_h = hs[:, -1]
+        if length is not None:
+            new_h = jnp.take_along_axis(
+                hs, (length - 1)[:, None, None, None], axis=1)[:, 0]
+        else:
+            new_h = hs[:, -1]
 
     y = jnp.einsum("btdn,btn->btd", hs, cmat,
                    preferred_element_type=jnp.float32)

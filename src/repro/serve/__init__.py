@@ -1,5 +1,6 @@
 """Continuous-batching serving engine (slot pool + scheduler + jitted
-decode loop). See repro/serve/engine.py for the architecture."""
+decode loop; block-paged pool + shared-prefix cache in repro.serve.paged).
+See repro/serve/engine.py and repro/serve/paged.py for the architecture."""
 
 from repro.serve.engine import (
     EngineConfig,
@@ -10,6 +11,13 @@ from repro.serve.engine import (
     default_buckets,
     synthetic_trace,
 )
+from repro.serve.paged import (
+    BlockLedger,
+    PagedConfig,
+    PagedServeEngine,
+    PrefixStore,
+    init_paged_pool,
+)
 from repro.serve.pool import (
     empty_row_like,
     init_pool,
@@ -19,7 +27,9 @@ from repro.serve.pool import (
 from repro.serve.sampling import make_sampler
 
 __all__ = [
-    "EngineConfig", "FinishedRequest", "Request", "Scheduler",
-    "ServeEngine", "default_buckets", "empty_row_like", "init_pool",
-    "reset_slot", "synthetic_trace", "write_slot", "make_sampler",
+    "BlockLedger", "EngineConfig", "FinishedRequest", "PagedConfig",
+    "PagedServeEngine", "PrefixStore", "Request", "Scheduler",
+    "ServeEngine", "default_buckets", "empty_row_like", "init_paged_pool",
+    "init_pool", "reset_slot", "synthetic_trace", "write_slot",
+    "make_sampler",
 ]

@@ -61,6 +61,7 @@ class FinishedRequest:
     prompt: np.ndarray
     tokens: List[int]               # generated ids (EOS included if hit)
     finish_reason: str              # "length" | "eos"
+    ttft_s: float = float("nan")    # submit -> first sampled token
 
 
 @dataclasses.dataclass
@@ -69,6 +70,7 @@ class _SlotState:
 
     req: Request
     tokens: List[int]
+    ttft_s: float = float("nan")
 
 
 # ---------------------------------------------------------------------------
@@ -126,11 +128,16 @@ class Scheduler:
     def submit(self, req: Request) -> None:
         self.queue.append(req)
 
-    def admit(self) -> List[Tuple[int, Request]]:
+    def admit(self, can_admit=None) -> List[Tuple[int, Request]]:
         """Pop (slot, request) pairs while both a free slot and a queued
-        request exist."""
+        request exist. ``can_admit(req)`` adds a resource predicate
+        beyond the free slot (the paged engine's "free blocks >= prompt
+        need"); admission is FIFO, so a blocked queue head blocks the
+        queue (no head-of-line bypass — determinism over utilization)."""
         out = []
         while self.queue and self.free:
+            if can_admit is not None and not can_admit(self.queue[0]):
+                break
             out.append((self.free.pop(), self.queue.popleft()))
         return out
 
@@ -190,17 +197,7 @@ class ServeEngine:
         self.mod = steps_mod.model_module(cfg)
         self.mesh = mesh
 
-        pool = pool_mod.init_pool(cfg, ecfg.max_slots, ecfg.max_len)
-        if self._quant:
-            # resident KV: int8 codes + sibling *_scale leaves (the
-            # pool machinery resolves those names to the same slot axis
-            # as their parent, so write/reset ride unchanged)
-            pool = jax.jit(self._sq.quantize_kv)(pool)
-        if mesh is not None:
-            from repro.dist import sharding as shard_rules
-            pool = jax.device_put(
-                pool, shard_rules.pool_sharding(pool, mesh))
-        self._pool = pool
+        self._pool = self._build_pool()
         B = ecfg.max_slots
         self._tok = jnp.zeros((B, 1), jnp.int32)
         self._active = jnp.zeros((B,), bool)
@@ -208,18 +205,44 @@ class ServeEngine:
         self._eos = jnp.full((B,), -1, jnp.int32)
         self._key = jax.random.PRNGKey(ecfg.seed)
 
-        # recurrent state means right-padded prompts would pollute the
-        # carried state => exact-length prefill for those families
-        exact = cfg.family not in ("dense", "moe")
+        # hybrid's windowed ring requires slot column c == position c, so
+        # its prompts prefill at exact length; padded prefill elsewhere is
+        # safe — attention re-masks pad columns, and recurrent mixers
+        # gather their carried state at the real boundary (state_len)
+        exact = cfg.family == "hybrid"
         self.scheduler = Scheduler(
             ecfg.max_slots, ecfg.buckets or default_buckets(ecfg.max_len),
             exact=exact)
         self._slots: Dict[int, _SlotState] = {}
         self._finished: List[FinishedRequest] = []
+        self._t_submit: Dict[int, float] = {}
 
         self._sampler = make_sampler(ecfg.method, ecfg.temperature,
                                      ecfg.top_k)
         self._sample1 = jax.jit(self._sampler)
+        self._build_programs()
+
+        self.stats: Dict[str, Any] = {}
+        self.reset_stats()
+
+    def _build_pool(self):
+        """Allocate the resident KV pool (subclass hook: the paged
+        engine builds a block pool instead of dense slot stripes)."""
+        pool = pool_mod.init_pool(self.cfg, self.ecfg.max_slots,
+                                  self.ecfg.max_len)
+        if self._quant:
+            # resident KV: int8 codes + sibling *_scale leaves (the
+            # pool machinery resolves those names to the same slot axis
+            # as their parent, so write/reset ride unchanged)
+            pool = jax.jit(self._sq.quantize_kv)(pool)
+        if self.mesh is not None:
+            from repro.dist import sharding as shard_rules
+            pool = jax.device_put(
+                pool, shard_rules.pool_sharding(pool, self.mesh))
+        return pool
+
+    def _build_programs(self) -> None:
+        """Build the engine's jitted programs (subclass hook)."""
         # one jitted prefill; jax's shape-keyed cache gives one compiled
         # program per (bucket length) — exactly the scheduler's bucket set
         self._prefill = jax.jit(self._make_prefill())
@@ -227,13 +250,10 @@ class ServeEngine:
                                donate_argnums=(1, 2, 3, 4, 6))
         self._admit = jax.jit(self._make_admit(),
                               donate_argnums=(0, 1, 2, 3, 4))
-        empty = pool_mod.empty_row_like(pool)
+        empty = pool_mod.empty_row_like(self._pool)
         self._reset = jax.jit(
             lambda p, s: pool_mod.reset_slot(p, s, empty),
             donate_argnums=(0,))
-
-        self.stats: Dict[str, Any] = {}
-        self.reset_stats()
 
     def reset_stats(self) -> None:
         """Zero counters + drop finished-request records (e.g. after a
@@ -241,8 +261,8 @@ class ServeEngine:
         self._finished.clear()
         self.stats.clear()
         self.stats.update({"prefills": 0, "decode_chunks": 0,
-                           "decode_tokens": 0, "prefill_s": 0.0,
-                           "decode_s": 0.0})
+                           "decode_tokens": 0, "prefill_tokens": 0,
+                           "prefill_s": 0.0, "decode_s": 0.0})
 
     # -- jitted program builders -------------------------------------------
 
@@ -289,32 +309,47 @@ class ServeEngine:
         cfg, mod = self.cfg, self.mod
         sampler = self._sampler
         chunk = self.ecfg.decode_chunk
+        max_len = self.ecfg.max_len
 
         quant = self._quant
+        # dense/moe: divert inactive slots' writes past the cache edge
+        # (idx -> max_len drops on the per-row scatter). This keeps idle
+        # slots' columns bitwise untouched, so the set of slots written
+        # in a chunk is exactly the chunk-entry active set — which is
+        # what lets int8 mode requantize only dirty slots. hybrid's
+        # ring write is modular in idx and cannot be diverted this way.
+        mask_idle = cfg.family in ("dense", "moe")
 
         def decode_chunk(params, pool, tok, active, remaining, eos_ids,
                          key):
             """``chunk`` model steps + sampling + termination as one
             program. Inactive slots keep stepping on their last token
-            (their writes land in freed columns and are healed by the
-            next ``write_slot``); ``emitted`` records which scan
-            iterations produced a real token per slot.
+            with their writes dropped (dense/moe) or landing in freed
+            columns healed by the next ``write_slot`` (hybrid/ssm);
+            ``emitted`` records which scan iterations produced a real
+            token per slot.
 
             In int8 mode the weights are dequantized once per chunk and
             the KV pool once per chunk boundary: the scan carries the
             float pool (fp32 dequant is exact on the codes), and the
             chunk's last state is re-encoded into the resident int8
-            layout — codes of untouched rows are stable across the
-            round trip (repro.lowp.serve_quant)."""
+            layout for the slots written this chunk only — untouched
+            slots carry their codes bitwise (repro.lowp.serve_quant)."""
             qpool = pool
+            dirty = active                       # chunk-entry active set
             if quant:
                 params = self._sq.dequantize_params(params)
                 pool = self._sq.dequantize_kv(pool)
 
             def body(carry, _):
                 pool, tok, active, remaining, key = carry
+                step_pool = pool
+                if mask_idle:
+                    step_pool = dict(pool)
+                    step_pool["idx"] = jnp.where(active, pool["idx"],
+                                                 max_len)
                 logits, new_pool = mod.decode_step(cfg, params, tok,
-                                                   pool)
+                                                   step_pool)
                 # keep the pool's declared dtypes across the scan carry
                 # (e.g. mamba's conv state is returned in compute dtype)
                 pool = jax.tree.map(
@@ -334,7 +369,9 @@ class ServeEngine:
                 length=chunk)
             pool, tok, active, remaining, key = carry
             if quant:
-                pool = self._sq.requantize_kv(pool, like=qpool)
+                pool = self._sq.requantize_kv(
+                    pool, like=qpool,
+                    dirty=dirty if mask_idle else None)
             return pool, tok, active, remaining, key, toks, emitted
 
         return decode_chunk
@@ -366,6 +403,7 @@ class ServeEngine:
                 f"request {req.rid}: prompt ({tp}) exceeds the local-"
                 f"attention ring ({self.cfg.window}); slot columns and "
                 "positions would no longer be identity-mapped")
+        self._t_submit[req.rid] = time.monotonic()
         self.scheduler.submit(req)
 
     @property
@@ -390,9 +428,18 @@ class ServeEngine:
                 self._eos, slot, row, jnp.asarray(tp, jnp.int32), first,
                 jnp.asarray(req.max_new_tokens - 1, jnp.int32),
                 jnp.asarray(req.eos_id, jnp.int32))
-            self._slots[slot] = _SlotState(req, [int(first)])
+            now = time.monotonic()
+            ttft = now - self._t_submit.pop(req.rid, t0)
+            self._slots[slot] = _SlotState(req, [int(first)], ttft)
             self.stats["prefills"] += 1
-            self.stats["prefill_s"] += time.monotonic() - t0
+            self.stats["prefill_tokens"] += bucket
+            self.stats["prefill_s"] += now - t0
+
+    def _release_slot(self, slot: int) -> None:
+        """Return a finished slot's resources (subclass hook: the paged
+        engine reclaims its table's blocks here)."""
+        self._pool = self._reset(self._pool, jnp.asarray(slot))
+        self.scheduler.release(slot)
 
     def _harvest(self) -> List[FinishedRequest]:
         done = []
@@ -405,11 +452,15 @@ class ServeEngine:
                                and st.tokens[-1] == st.req.eos_id) \
                 else "length"
             done.append(FinishedRequest(st.req.rid, st.req.prompt,
-                                        st.tokens, reason))
-            self._pool = self._reset(self._pool, jnp.asarray(slot))
-            self.scheduler.release(slot)
+                                        st.tokens, reason, st.ttft_s))
+            self._release_slot(slot)
         self._finished.extend(done)
         return done
+
+    def _pre_decode(self) -> None:
+        """Hook run before each decode-chunk dispatch (the paged engine
+        grows block tables for the coming chunk here, with backpressure
+        when the free-list runs dry)."""
 
     def step(self) -> List[FinishedRequest]:
         """One engine iteration: admit -> decode one chunk -> harvest.
@@ -422,6 +473,9 @@ class ServeEngine:
         done = self._harvest()
         if not self._slots:
             return done
+        self._pre_decode()
+        if not self._slots:      # backpressure may have preempted all
+            return done + self._harvest()
         t0 = time.monotonic()
         self._key, sub = jax.random.split(self._key)
         (self._pool, self._tok, self._active, self._remaining, sub,

@@ -1,0 +1,789 @@
+"""Block-paged KV pool + shared-prefix cache for the serving engine.
+
+The slot pool (:mod:`repro.serve.pool`) reserves ``max_len`` cache
+columns per slot up front, so device memory — not compute — caps
+concurrency: a slot generating 30 tokens from a 20-token prompt holds
+the same footprint as one filling all 256 columns. This module carves
+the same cache arrays into fixed-size **position blocks** instead
+(the vLLM/PagedAttention layout, on this repo's cache machinery):
+
+* **Physical pool**: every KV leaf becomes ``(L, n_blocks, block_len,
+  ...)`` — ``init_cache(cfg, n_blocks, block_len)`` verbatim, batch dim
+  reinterpreted as blocks. A device-resident free *stack* (``free`` +
+  ``free_top``) and a per-slot **block table** ``(max_slots, nbps)``
+  map virtual column ``c`` of a slot to physical ``(table[c//bl],
+  c % bl)``; unmapped entries carry the sentinel id ``n_blocks`` so
+  gathers fill (far-future ``pos`` -> masked) and scatters drop.
+* **Paged attention** (models/layers.py ``paged_kv_read/write``):
+  decode gathers the table into a virtual ``(B, nbps*bl, ...)`` cache
+  whose column c *is* absolute position c — attention then rides the
+  existing ``UNWRITTEN_POS`` masking unchanged, which is what makes
+  paged decode token-for-token identical to the slot engine.
+* **Shared-prefix cache** (:class:`PrefixStore`): full blocks of a
+  prompt are content-addressed by their token prefix; a prompt whose
+  head blocks hit the store maps them into its table by reference and
+  prefills only the suffix. Sharing is copy-on-write *structurally*:
+  only full blocks are ever registered, decode writes land at column
+  ``>= prompt_len`` — never inside a full shared block — so shared
+  storage is immutable without any copying machinery.
+* **Backpressure**: admission requires free blocks >= the prompt's
+  block need; mid-decode growth that outruns the free stack first
+  evicts store LRU entries, then preempts the youngest admission
+  (requeued at the queue head and resumed later, token-exact because
+  decoding is deterministic given the prompt + generated prefix).
+
+Allocator discipline: the device free stack is mirrored *deterministic-
+ally* by a host :class:`BlockLedger` (same push/pop order), so the host
+always knows table contents, free counts and refcounts without reading
+device state back — the engine keeps its chunk-boundary-only sync
+cadence. Freed blocks get their ``pos`` track reset to the sentinel on
+release; a reused block can therefore never leak a previous tenant's
+attendable positions.
+
+Families: dense/moe only. Recurrent caches (ssm/hybrid) are a carried
+*state*, not position-indexed storage — there is nothing to page; those
+families keep the slot engine (a clear error says so).
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import hashlib
+import time
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.api import path_key
+from repro.models.layers import UNWRITTEN_POS
+from repro.serve.engine import (
+    EngineConfig,
+    Request,
+    ServeEngine,
+    _SlotState,
+)
+
+__all__ = [
+    "PagedConfig",
+    "PagedServeEngine",
+    "BlockLedger",
+    "PrefixStore",
+    "init_paged_pool",
+]
+
+
+# ---------------------------------------------------------------------------
+# Config
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PagedConfig(EngineConfig):
+    """Engine config + paging knobs. ``n_blocks = 0`` allocates the
+    slot-equivalent capacity ``max_slots * (max_len / block_len)`` —
+    undersubscribe it to serve more slots than the memory could hold
+    densely (the whole point), backstopped by admission backpressure."""
+
+    block_len: int = 16
+    n_blocks: int = 0
+    prefix_cache: bool = False
+    # admission additionally keeps this many blocks free as growth
+    # headroom (0: admit greedily, rely on evict/preempt backpressure)
+    admit_watermark: int = 0
+
+
+# ---------------------------------------------------------------------------
+# Pool construction + jitted block ops
+# ---------------------------------------------------------------------------
+
+def init_paged_pool(cfg, max_slots: int, max_len: int, block_len: int,
+                    n_blocks: int) -> Dict[str, Any]:
+    """Block pool: the model's own decode cache allocated as
+    ``(n_blocks, block_len)`` rows, plus table/free-stack bookkeeping.
+
+    Layout: ``cache`` {"layers": (L, n_blocks, bl, ...) leaves},
+    ``idx`` (max_slots,) per-slot lengths, ``table`` (max_slots, nbps)
+    physical ids (``n_blocks`` = unmapped), ``n_mapped`` (max_slots,),
+    ``free`` (n_blocks,) stack storage, ``free_top`` scalar (entries
+    below it are free; pop order is top-down)."""
+    from repro.launch import steps as steps_mod
+
+    if cfg.family not in ("dense", "moe"):
+        raise NotImplementedError(
+            f"paged KV serving needs a position-indexed cache; the "
+            f"{cfg.family!r} family carries recurrent state (nothing to "
+            "page) — use the slot engine (repro.serve.ServeEngine)")
+    if block_len < 1:
+        raise ValueError(f"block_len must be >= 1, got {block_len}")
+    if max_len % block_len:
+        raise ValueError(f"max_len ({max_len}) must be a multiple of "
+                         f"block_len ({block_len})")
+    nbps = max_len // block_len
+    if n_blocks < nbps:
+        raise ValueError(
+            f"n_blocks ({n_blocks}) < blocks per max-length request "
+            f"({nbps}): a single session could never fit")
+    mod = steps_mod.model_module(cfg)
+    cache = mod.init_cache(cfg, n_blocks, block_len)
+    return {
+        "cache": {"layers": cache["layers"]},
+        "idx": jnp.zeros((max_slots,), jnp.int32),
+        "table": jnp.full((max_slots, nbps), n_blocks, jnp.int32),
+        "n_mapped": jnp.zeros((max_slots,), jnp.int32),
+        "free": jnp.arange(n_blocks, dtype=jnp.int32),
+        "free_top": jnp.asarray(n_blocks, jnp.int32),
+    }
+
+
+def _pool_dims(pool) -> Tuple[int, int, int]:
+    """(n_blocks, block_len, nbps) from array shapes (jit-safe)."""
+    n_blocks, bl = pool["cache"]["layers"]["pos"].shape[1:3]
+    return n_blocks, bl, pool["table"].shape[1]
+
+
+def paged_write_slot(pool, slot, row, length, shared_ids, n_shared,
+                     n_total):
+    """Admit a prefilled request into ``slot``: map ``n_total`` blocks —
+    the first ``n_shared`` by reference from ``shared_ids`` (prefix
+    hits), the rest popped fresh off the free stack — then scatter the
+    dense prefill ``row`` (leaves ``(L, 1, max_len, ...)``) into the
+    *fresh* blocks only. Shared blocks are never written (CoW
+    discipline: their storage may be mapped by other slots too).
+
+    ``slot``/``length``/``n_shared``/``n_total`` are traced scalars,
+    ``shared_ids`` a traced (nbps,) row padded with the sentinel — one
+    compiled program for every admission. The host ledger must mirror
+    the pop order: ``n_total - n_shared`` pops, top-down."""
+    n_blocks, bl, nbps = _pool_dims(pool)
+    table, free, top = pool["table"], pool["free"], pool["free_top"]
+    row = {"layers": row["layers"]}      # drop the row's scalar idx
+    j = jnp.arange(nbps)
+    fresh = free[jnp.clip(top - 1 - (j - n_shared), 0, n_blocks - 1)]
+    row_ids = jnp.where(j < n_shared, shared_ids,
+                        jnp.where(j < n_total, fresh, n_blocks))
+
+    def scatter(path, dst, src):
+        base = path_key(path).rsplit("/", 1)[-1]
+        src = src[:, 0]                          # (L, S, ...)
+        if base == "pos":
+            cols = jnp.arange(src.shape[1])
+            src = jnp.where(cols < length, src, UNWRITTEN_POS)
+        L, S = src.shape[:2]
+        src = src.reshape(L, S // bl, bl, *src.shape[2:])
+        tgt = jnp.where(j >= n_shared, row_ids, n_blocks)
+        return dst.at[:, tgt].set(src.astype(dst.dtype), mode="drop")
+
+    cache = jax.tree_util.tree_map_with_path(scatter, pool["cache"], row)
+    return dict(
+        pool,
+        cache=cache,
+        table=table.at[slot].set(row_ids),
+        n_mapped=pool["n_mapped"].at[slot].set(n_total),
+        idx=pool["idx"].at[slot].set(
+            jnp.asarray(length, jnp.int32)),
+        free_top=top - (n_total - n_shared),
+    )
+
+
+def grow_tables(pool, active, chunk: int):
+    """Map fresh blocks so every active slot can write the next
+    ``chunk`` positions ``[idx, idx+chunk)``. Pops are slot-major then
+    block-major off the stack top — the exact order
+    :meth:`BlockLedger.apply_grow` replays. The host guarantees the
+    stack holds enough (backpressure runs before dispatch)."""
+    n_blocks, bl, nbps = _pool_dims(pool)
+    table, free, top = pool["table"], pool["free"], pool["free_top"]
+    idx, nm = pool["idx"], pool["n_mapped"]
+    need = jnp.minimum((idx + chunk + bl - 1) // bl, nbps)
+    need_new = jnp.clip(need - nm, 0) * active
+    offs = jnp.cumsum(need_new) - need_new
+    rows = jnp.arange(table.shape[0])
+    for k in range(chunk // bl + 1):
+        take = k < need_new
+        col = jnp.where(take, nm + k, nbps)      # nbps: dropped
+        bid = free[jnp.clip(top - 1 - (offs + k), 0, n_blocks - 1)]
+        table = table.at[rows, col].set(bid, mode="drop")
+    return dict(pool, table=table, n_mapped=nm + need_new,
+                free_top=top - need_new.sum())
+
+
+def _push_reset(pool, free, top, ids, push):
+    """Push ``ids[push]`` onto the free stack (in ``ids`` order) and
+    reset their ``pos`` tracks to the far-future sentinel — a reused
+    block must never expose a previous tenant's attendable columns."""
+    n_blocks = free.shape[0]
+    k = jnp.cumsum(push) - push
+    dest = jnp.where(push, top + k, n_blocks)
+    free = free.at[dest].set(ids, mode="drop")
+    tgt = jnp.where(push, ids, n_blocks)
+
+    def reset(path, leaf):
+        if path_key(path).rsplit("/", 1)[-1] != "pos":
+            return leaf
+        return leaf.at[:, tgt].set(UNWRITTEN_POS, mode="drop")
+
+    cache = jax.tree_util.tree_map_with_path(reset, pool["cache"])
+    return cache, free, top + push.sum()
+
+
+def release_slot_blocks(pool, slot, free_mask):
+    """Unmap ``slot``'s table. ``free_mask`` (nbps,) — host-computed
+    from refcounts — says which of its blocks actually return to the
+    free stack (a block shared with the prefix store or other slots
+    stays allocated)."""
+    n_blocks, _, nbps = _pool_dims(pool)
+    ids = jnp.take(pool["table"], slot, axis=0)
+    push = free_mask & (ids < n_blocks)
+    cache, free, top = _push_reset(pool, pool["free"],
+                                   pool["free_top"], ids, push)
+    return dict(
+        pool, cache=cache, free=free, free_top=top,
+        table=pool["table"].at[slot].set(
+            jnp.full((nbps,), n_blocks, jnp.int32)),
+        n_mapped=pool["n_mapped"].at[slot].set(0),
+        idx=pool["idx"].at[slot].set(0),
+    )
+
+
+def push_blocks(pool, ids, valid):
+    """Return evicted store blocks (no table owner) to the free stack."""
+    n_blocks = pool["free"].shape[0]
+    push = valid & (ids < n_blocks)
+    cache, free, top = _push_reset(pool, pool["free"],
+                                   pool["free_top"], ids, push)
+    return dict(pool, cache=cache, free=free, free_top=top)
+
+
+# ---------------------------------------------------------------------------
+# Host mirrors: allocator ledger + prefix store
+# ---------------------------------------------------------------------------
+
+class BlockLedger:
+    """Deterministic host mirror of the device allocator.
+
+    Every device-side push/pop (admission, growth, release, eviction)
+    is replayed here in the identical order, so the host knows the
+    block tables, the free count and per-block refcounts without ever
+    reading device state back — backpressure decisions stay on the
+    engine's chunk-boundary sync cadence. ``refcount[b]`` counts
+    holders: each slot whose table maps ``b``, plus the prefix store if
+    it has an entry for ``b``; a block frees when it drops to zero."""
+
+    def __init__(self, n_blocks: int, max_slots: int, nbps: int,
+                 block_len: int):
+        self.n_blocks, self.nbps, self.bl = n_blocks, nbps, block_len
+        self.table = np.full((max_slots, nbps), n_blocks, np.int32)
+        self.n_mapped = np.zeros(max_slots, np.int64)
+        self.idx = np.zeros(max_slots, np.int64)
+        self.free = np.arange(n_blocks, dtype=np.int32)
+        self.top = n_blocks
+        self.refcount = np.zeros(n_blocks, np.int64)
+
+    def _pop(self, n: int) -> List[int]:
+        if n > self.top:
+            raise RuntimeError(
+                f"free-stack underflow: pop {n} with {self.top} free "
+                "(backpressure must run before any pop)")
+        ids = [int(self.free[self.top - 1 - k]) for k in range(n)]
+        self.top -= n
+        return ids
+
+    def _push(self, bid: int) -> None:
+        self.free[self.top] = bid
+        self.top += 1
+
+    def assign(self, slot: int, shared: Sequence[int], n_total: int,
+               length: int) -> List[int]:
+        """Mirror :func:`paged_write_slot`; returns the slot's mapped
+        block ids (shared head + fresh tail)."""
+        row = list(shared) + self._pop(n_total - len(shared))
+        self.table[slot, :] = self.n_blocks
+        self.table[slot, :n_total] = row
+        self.n_mapped[slot] = n_total
+        self.idx[slot] = length
+        for bid in row:
+            self.refcount[bid] += 1
+        return row
+
+    def grow_need(self, slots: Sequence[int], chunk: int) -> int:
+        """Blocks :func:`grow_tables` will pop for the coming chunk."""
+        return sum(self._need_new(s, chunk) for s in slots)
+
+    def _need_new(self, slot: int, chunk: int) -> int:
+        need = min(-(-(self.idx[slot] + chunk) // self.bl), self.nbps)
+        return int(max(need - self.n_mapped[slot], 0))
+
+    def apply_grow(self, slots: Sequence[int], chunk: int) -> None:
+        """Mirror :func:`grow_tables` (slot-major pop order) and advance
+        each slot's length by the chunk about to run. Slots that
+        deactivate mid-chunk are released before the next grow, so the
+        optimistic advance is never compared against the device."""
+        for slot in sorted(slots):
+            n_new = self._need_new(slot, chunk)
+            for bid in self._pop(n_new):
+                self.table[slot, self.n_mapped[slot]] = bid
+                self.n_mapped[slot] += 1
+                self.refcount[bid] += 1
+            self.idx[slot] += chunk
+
+    def release(self, slot: int) -> np.ndarray:
+        """Drop ``slot``'s holds; returns the (nbps,) mask of blocks
+        whose refcount hit zero — the device-side free mask."""
+        mask = np.zeros(self.nbps, bool)
+        for j in range(int(self.n_mapped[slot])):
+            bid = int(self.table[slot, j])
+            self.refcount[bid] -= 1
+            if self.refcount[bid] == 0:
+                mask[j] = True
+                self._push(bid)
+        self.table[slot, :] = self.n_blocks
+        self.n_mapped[slot] = 0
+        self.idx[slot] = 0
+        return mask
+
+    def drop_ref(self, bid: int) -> bool:
+        """Store eviction: drop one hold; True if the block freed (the
+        caller must then push it on the *device* stack too)."""
+        self.refcount[bid] -= 1
+        if self.refcount[bid] == 0:
+            self._push(bid)
+            return True
+        return False
+
+
+class PrefixStore:
+    """Content-addressed full-block prefix cache (host index only — the
+    payload is the block pool itself).
+
+    Key: the byte string of the prompt's first ``(i+1) * block_len``
+    tokens; value: the physical block id holding positions
+    ``[i*bl, (i+1)*bl)`` of that token prefix. Only *full* blocks are
+    registered, so shared storage is structurally immutable (module
+    docstring). LRU order is refreshed on hit; eviction drops the
+    store's refcount hold — blocks still mapped by live slots survive
+    until those slots release."""
+
+    def __init__(self, block_len: int):
+        self.bl = block_len
+        self.entries: "collections.OrderedDict[bytes, int]" = \
+            collections.OrderedDict()
+
+    def __len__(self) -> int:
+        return len(self.entries)
+
+    def _key(self, tokens: np.ndarray, n_blocks: int) -> bytes:
+        return hashlib.sha1(np.ascontiguousarray(
+            tokens[: n_blocks * self.bl], np.int32).tobytes()).digest()
+
+    def lookup(self, tokens: np.ndarray) -> List[int]:
+        """Longest chain of consecutive full-block hits from position
+        0; refreshes LRU order of the hits."""
+        hits: List[int] = []
+        for i in range(len(tokens) // self.bl):
+            key = self._key(tokens, i + 1)
+            if key not in self.entries:
+                break
+            self.entries.move_to_end(key)
+            hits.append(self.entries[key])
+        return hits
+
+    def register(self, tokens: np.ndarray, row_ids: Sequence[int],
+                 lo: int, hi: int) -> List[int]:
+        """Publish blocks ``lo..hi-1`` of a freshly prefilled prompt;
+        returns the ids actually inserted (the caller adds the store's
+        refcount hold for each)."""
+        new = []
+        for i in range(lo, hi):
+            key = self._key(tokens, i + 1)
+            if key not in self.entries:
+                self.entries[key] = int(row_ids[i])
+                new.append(int(row_ids[i]))
+        return new
+
+    def evict_lru(self) -> Optional[int]:
+        """Drop the least-recently-used entry; returns its block id."""
+        if not self.entries:
+            return None
+        _, bid = self.entries.popitem(last=False)
+        return bid
+
+
+# ---------------------------------------------------------------------------
+# Engine
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class _Resume:
+    """A preempted request back in the queue: its generated prefix is
+    part of the effective prompt on re-admission (deterministic decode
+    makes the resumed stream token-exact)."""
+
+    req: Request
+    tokens: List[int]
+    ttft_s: float
+
+    @property
+    def rid(self):
+        return self.req.rid
+
+
+def _effective_prompt(item) -> np.ndarray:
+    if isinstance(item, _Resume):
+        return np.concatenate([np.asarray(item.req.prompt, np.int32),
+                               np.asarray(item.tokens, np.int32)])
+    return np.asarray(item.prompt, np.int32)
+
+
+class PagedServeEngine(ServeEngine):
+    """Continuous-batching engine over the block-paged pool.
+
+    Inherits the scheduler/step/run machinery and the single-jit
+    program discipline from :class:`ServeEngine`; overrides the pool
+    build, the jitted programs (admission scatter, block-growing decode
+    chunk) and the admission/release paths (prefix cache, refcounted
+    reclaim, backpressure)."""
+
+    def __init__(self, cfg, params, ecfg: PagedConfig, mesh=None):
+        if not isinstance(ecfg, PagedConfig):
+            ecfg = PagedConfig(**dataclasses.asdict(ecfg))
+        super().__init__(cfg, params, ecfg, mesh)
+        self._ledger = BlockLedger(self._n_blocks, ecfg.max_slots,
+                                   self._nbps, self._bl)
+        self._store: Optional[PrefixStore] = \
+            PrefixStore(self._bl) if ecfg.prefix_cache else None
+        self._admit_seq = 0
+        self._slot_seq: Dict[int, int] = {}
+        # fixed pad width for eviction pushes: one compiled program
+        self._push_pad = min(64, self._n_blocks)
+
+    # -- construction ------------------------------------------------------
+
+    def _build_pool(self):
+        e = self.ecfg
+        self._bl = e.block_len
+        self._nbps = e.max_len // e.block_len if e.block_len else 0
+        self._n_blocks = e.n_blocks or e.max_slots * self._nbps
+        pool = init_paged_pool(self.cfg, e.max_slots, e.max_len,
+                               e.block_len, self._n_blocks)
+        if self._quant:
+            pool = dict(pool,
+                        cache=jax.jit(self._sq.quantize_kv)(pool["cache"]))
+        if self.mesh is not None:
+            from repro.dist import sharding as shard_rules
+            pool = jax.device_put(
+                pool, shard_rules.paged_pool_sharding(pool, self.mesh))
+        return pool
+
+    def _build_programs(self) -> None:
+        self._prefill = jax.jit(self._make_prefill())
+        self._prefill_ext = jax.jit(self._make_prefill_ext())
+        self._admit_paged = jax.jit(self._make_paged_admit(),
+                                    donate_argnums=(0, 1, 2, 3, 4))
+        self._decode = jax.jit(self._make_decode_chunk(),
+                               donate_argnums=(1, 2, 3, 4, 6))
+        self._release = jax.jit(release_slot_blocks, donate_argnums=(0,))
+        self._push = jax.jit(push_blocks, donate_argnums=(0,))
+        self._deact = jax.jit(lambda a, s: a.at[s].set(False),
+                              donate_argnums=(0,))
+
+    def reset_stats(self) -> None:
+        super().reset_stats()
+        self.stats.update({"prefix_hits": 0, "prefix_hit_tokens": 0,
+                           "preemptions": 0, "evictions": 0})
+
+    @property
+    def free_blocks(self) -> int:
+        return int(self._ledger.top)
+
+    # -- jitted program builders -------------------------------------------
+
+    def _make_prefill_ext(self):
+        """Prefix-hit prefill: gather the shared head blocks into the
+        front columns of a dense row cache, then prefill only the
+        suffix (positions continue from the shared length). Compiled
+        per (n-hit-blocks, suffix bucket) pair."""
+        cfg, mod, max_len = self.cfg, self.mod, self.ecfg.max_len
+        quant, bl = self._quant, self._bl
+
+        def prefill_ext(params, tokens, blocks, pool_cache, suffix_len):
+            if quant:
+                params = self._sq.dequantize_params(params)
+                pool_cache = self._sq.dequantize_kv(pool_cache)
+            ns = blocks.shape[0] * bl            # static shared length
+            cache = mod.init_cache(cfg, 1, max_len)
+
+            def fill(_path, dst, src):
+                g = jnp.take(src, blocks, axis=1)
+                g = g.reshape(src.shape[0], 1, ns, *src.shape[3:])
+                return dst.at[:, :, :ns].set(g.astype(dst.dtype))
+
+            layers = jax.tree_util.tree_map_with_path(
+                fill, cache["layers"], pool_cache["layers"])
+            cache = {"layers": layers, "idx": jnp.asarray(ns, jnp.int32)}
+            logits, row = mod.prefill(cfg, params, {"tokens": tokens},
+                                      cache, length=suffix_len[None])
+            return logits, row
+
+        return prefill_ext
+
+    def _make_paged_admit(self):
+        quant = self._quant
+
+        def admit(pool, tok, active, remaining, eos_ids, slot, row,
+                  length, first_tok, n_remaining, eos_id, shared_ids,
+                  n_shared, n_total):
+            if quant:
+                row = self._sq.quantize_kv(row)
+            pool = paged_write_slot(pool, slot, row, length, shared_ids,
+                                    n_shared, n_total)
+            tok = jax.lax.dynamic_update_slice(
+                tok, first_tok.reshape(1, 1), (slot, 0))
+            hit_eos = (first_tok == eos_id) & (eos_id >= 0)
+            alive = (n_remaining > 0) & ~hit_eos
+            active = jax.lax.dynamic_update_slice(
+                active, alive[None], (slot,))
+            remaining = jax.lax.dynamic_update_slice(
+                remaining, n_remaining[None], (slot,))
+            eos_ids = jax.lax.dynamic_update_slice(
+                eos_ids, eos_id[None], (slot,))
+            return pool, tok, active, remaining, eos_ids
+
+        return admit
+
+    def _make_decode_chunk(self):
+        """Paged decode chunk: grow block tables for the chunk's write
+        range, then scan the model's paged decode step. Same contract
+        as the slot engine's chunk (token/active/remaining/emitted),
+        plus int8 requantization restricted to the blocks the chunk
+        actually wrote (the dirty set is exact: inactive rows' writes
+        target the sentinel block and drop)."""
+        cfg, mod = self.cfg, self.mod
+        sampler = self._sampler
+        chunk = self.ecfg.decode_chunk
+        max_len = self.ecfg.max_len
+        quant, bl, nbps = self._quant, self._bl, self._nbps
+
+        def decode_chunk(params, pool, tok, active, remaining, eos_ids,
+                         key):
+            pool = grow_tables(pool, active, chunk)
+            n_blocks = pool["free"].shape[0]
+            # blocks covering each active slot's [idx, idx+chunk)
+            rows = jnp.arange(pool["table"].shape[0])
+            start = pool["idx"] // bl
+            dirty = jnp.zeros((n_blocks + 1,), bool)
+            for k in range(chunk // bl + 1):
+                col = start + k
+                ok = active & (col * bl < pool["idx"] + chunk) \
+                    & (col < nbps)
+                ids = pool["table"][rows, jnp.minimum(col, nbps - 1)]
+                dirty = dirty.at[jnp.where(ok, ids, n_blocks)].set(
+                    True, mode="drop")
+            dirty = dirty[:n_blocks]
+
+            qcache = cache = pool["cache"]
+            if quant:
+                params = self._sq.dequantize_params(params)
+                cache = self._sq.dequantize_kv(cache)
+
+            def body(carry, _):
+                cache, idx, tok, active, remaining, key = carry
+                step = dict(cache)
+                step["table"] = pool["table"]
+                # inactive rows write at max_len -> sentinel block ->
+                # dropped; their true idx is preserved outside
+                step["idx"] = jnp.where(active, idx, max_len)
+                logits, new = mod.decode_step(cfg, params, tok, step)
+                new = {k: v for k, v in new.items()
+                       if k not in ("idx", "table")}
+                cache = jax.tree.map(
+                    lambda n, o: n.astype(o.dtype), new, cache)
+                idx = idx + active.astype(jnp.int32)
+                key, sub = jax.random.split(key)
+                nxt = sampler(logits, sub)
+                nxt = jnp.where(active, nxt, tok[:, 0])
+                emitted = active
+                remaining = remaining - active.astype(jnp.int32)
+                hit_eos = (nxt == eos_ids) & (eos_ids >= 0)
+                active = active & (remaining > 0) & ~hit_eos
+                return ((cache, idx, nxt[:, None], active, remaining,
+                         key), (nxt, emitted))
+
+            carry, (toks, emitted) = jax.lax.scan(
+                body, (cache, pool["idx"], tok, active, remaining, key),
+                None, length=chunk)
+            cache, idx, tok, active, remaining, key = carry
+            if quant:
+                cache = self._sq.requantize_kv(cache, like=qcache,
+                                               dirty=dirty)
+            pool = dict(pool, cache=cache, idx=idx)
+            return pool, tok, active, remaining, key, toks, emitted
+
+        return decode_chunk
+
+    # -- admission / release / backpressure --------------------------------
+
+    def _plan(self, item):
+        """(tokens, tp, n_hit_blocks, hit_ids, n_total_blocks) for a
+        queued item: prefix-store hits capped so (a) at least one
+        suffix token remains to prefill and (b) shared length + suffix
+        bucket still fit the row cache."""
+        tokens = _effective_prompt(item)
+        tp = len(tokens)
+        bl = self._bl
+        hits = self._store.lookup(tokens) if self._store is not None \
+            else []
+        n_hit = min(len(hits), (tp - 1) // bl)
+        while n_hit > 0 and n_hit * bl + self.scheduler.bucket_for(
+                tp - n_hit * bl) > self.ecfg.max_len:
+            n_hit -= 1
+        return tokens, tp, n_hit, hits[:n_hit], -(-tp // bl)
+
+    def _evict_store(self, want: int) -> int:
+        """Evict store LRU entries until ``want`` blocks freed (or the
+        store drains); pushes the freed ids back on the device stack.
+        Returns the number actually freed."""
+        if self._store is None:
+            return 0
+        freed: List[int] = []
+        while len(freed) < want and len(self._store):
+            bid = self._store.evict_lru()
+            self.stats["evictions"] += 1
+            if self._ledger.drop_ref(bid):
+                freed.append(bid)
+        for lo in range(0, len(freed), self._push_pad):
+            ids = np.full((self._push_pad,), self._n_blocks, np.int32)
+            part = freed[lo:lo + self._push_pad]
+            ids[:len(part)] = part
+            valid = np.arange(self._push_pad) < len(part)
+            self._pool = self._push(self._pool, jnp.asarray(ids),
+                                    jnp.asarray(valid))
+        return len(freed)
+
+    def _do_admissions(self) -> None:
+        e = self.ecfg
+
+        def can_admit(item):
+            _, _, n_hit, _, n_total = self._plan(item)
+            budget = self._ledger.top - e.admit_watermark
+            if n_total - n_hit <= budget:
+                return True
+            self._evict_store(n_total - n_hit - budget)
+            return n_total - n_hit <= self._ledger.top - e.admit_watermark
+
+        for slot, item in self.scheduler.admit(can_admit):
+            t0 = time.monotonic()
+            # re-plan until the block budget holds: an eviction inside
+            # ``can_admit`` may have dropped some of this prompt's own
+            # prefix hits, raising its fresh-block need
+            while True:
+                tokens, tp, n_hit, hit_ids, n_total = self._plan(item)
+                short = n_total - n_hit - self._ledger.top
+                if short <= 0:
+                    break
+                if not self._evict_store(short):
+                    break
+            if n_total - n_hit > self._ledger.top:
+                # cannot place it after all — put it back at the head
+                self.scheduler.queue.appendleft(item)
+                self.scheduler.release(slot)
+                break
+            req = item.req if isinstance(item, _Resume) else item
+            prior = list(item.tokens) if isinstance(item, _Resume) \
+                else []
+            if n_hit:
+                suffix = tokens[n_hit * self._bl:]
+                bucket = self.scheduler.bucket_for(len(suffix))
+                toks = np.zeros((1, bucket), np.int32)
+                toks[0, :len(suffix)] = suffix
+                logits, row = self._prefill_ext(
+                    self.params, jnp.asarray(toks),
+                    jnp.asarray(np.asarray(hit_ids, np.int32)),
+                    self._pool["cache"],
+                    jnp.asarray(len(suffix), jnp.int32))
+                self.stats["prefix_hits"] += 1
+                self.stats["prefix_hit_tokens"] += n_hit * self._bl
+            else:
+                bucket = self.scheduler.bucket_for(tp)
+                toks = np.zeros((1, bucket), np.int32)
+                toks[0, :tp] = tokens
+                logits, row = self._prefill(
+                    self.params, jnp.asarray(toks),
+                    jnp.asarray(tp, jnp.int32))
+            self._key, sub = jax.random.split(self._key)
+            first = self._sample1(logits, sub)[0]
+            shared = np.full((self._nbps,), self._n_blocks, np.int32)
+            shared[:n_hit] = hit_ids
+            row_ids = self._ledger.assign(slot, hit_ids, n_total, tp)
+            (self._pool, self._tok, self._active, self._remaining,
+             self._eos) = self._admit_paged(
+                self._pool, self._tok, self._active, self._remaining,
+                self._eos, slot, row, jnp.asarray(tp, jnp.int32), first,
+                jnp.asarray(req.max_new_tokens - len(prior) - 1,
+                            jnp.int32),
+                jnp.asarray(req.eos_id, jnp.int32),
+                jnp.asarray(shared), jnp.asarray(n_hit, jnp.int32),
+                jnp.asarray(n_total, jnp.int32))
+            if self._store is not None:
+                # publish this prompt's fresh full blocks (never the
+                # partial tail: decode writes into it)
+                orig = np.asarray(req.prompt, np.int32)
+                for bid in self._store.register(
+                        orig, row_ids, n_hit, len(orig) // self._bl):
+                    self._ledger.refcount[bid] += 1
+            now = time.monotonic()
+            ttft = item.ttft_s if isinstance(item, _Resume) else \
+                now - self._t_submit.pop(req.rid, t0)
+            self._slots[slot] = _SlotState(req, prior + [int(first)],
+                                           ttft)
+            self._slot_seq[slot] = self._admit_seq
+            self._admit_seq += 1
+            self.stats["prefills"] += 1
+            self.stats["prefill_tokens"] += bucket
+            self.stats["prefill_s"] += now - t0
+
+    def _release_slot(self, slot: int) -> None:
+        mask = self._ledger.release(slot)
+        self._pool = self._release(self._pool,
+                                   jnp.asarray(slot, jnp.int32),
+                                   jnp.asarray(mask))
+        self._slot_seq.pop(slot, None)
+        self.scheduler.release(slot)
+
+    def _preempt(self, slot: int) -> None:
+        """Evict the youngest admission mid-flight: free its blocks,
+        requeue it at the queue head with its generated prefix (resume
+        is token-exact — greedy decode is deterministic in the
+        prefix). The freed blocks unblock the older sessions' growth."""
+        st = self._slots.pop(slot)
+        self._release_slot(slot)
+        self._active = self._deact(self._active,
+                                   jnp.asarray(slot, jnp.int32))
+        self.scheduler.queue.appendleft(
+            _Resume(st.req, st.tokens, st.ttft_s))
+        self.stats["preemptions"] += 1
+
+    def _pre_decode(self) -> None:
+        """Backpressure: before dispatching a chunk, make sure the free
+        stack covers every active slot's block growth — evict store LRU
+        first, preempt youngest admissions if that is not enough. With
+        one slot left the demand always fits (``n_blocks >= nbps`` is
+        validated at construction), so the loop terminates."""
+        chunk = self.ecfg.decode_chunk
+        while True:
+            slots = sorted(self._slots)
+            shortage = self._ledger.grow_need(slots, chunk) \
+                - self._ledger.top
+            if shortage <= 0:
+                break
+            if self._evict_store(shortage):
+                continue
+            if len(slots) <= 1:
+                raise RuntimeError(
+                    "paged pool exhausted with a single active session "
+                    "— n_blocks accounting is broken (unreachable: "
+                    "construction validates n_blocks >= max_len/bl)")
+            self._preempt(max(slots, key=lambda s: self._slot_seq[s]))
+        self._ledger.apply_grow(sorted(self._slots), chunk)

@@ -30,10 +30,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.dist.api import path_key
-
-#: far-future sentinel position: the causal mask (q_pos >= kv_pos)
-#: excludes cache columns carrying it (models init their caches with it)
-UNWRITTEN_POS = 2 ** 30
+from repro.models.layers import UNWRITTEN_POS  # noqa: F401  (re-export:
+# the sentinel lives with the masking logic in models/layers; the pool
+# and the paged pool both build on it)
 
 
 def slot_dim(key: str, ndim: int) -> int:
@@ -92,6 +91,10 @@ def write_slot(pool: Any, slot, row: Any, length) -> Any:
     bucket-padding junk written during prefill is never attended, and
     the slot's length vector entry is set to ``length`` (a right-padded
     prefill leaves ``row["idx"] == padded_len``, which must not leak).
+    Recurrent-state leaves are copied verbatim: they carry no position
+    axis to re-mask — the model's prefill already gathers the state at
+    position ``length-1`` (``state_len`` in models/lm.forward), so a
+    right-padded row arrives boundary-correct.
     ``slot``/``length`` may be traced scalars (single jit)."""
     length = jnp.asarray(length, jnp.int32)
 

@@ -195,6 +195,39 @@ class TestServeQuant:
         same = serve_quant.dequantize_kv(pool)
         assert same["layers"]["k"] is pool["layers"]["k"]
 
+    def test_requantize_dirty_mask_pins_clean_entries(self):
+        """Dirty-masked requant (the paged engine's per-chunk path):
+        entries of axis 1 outside the mask keep their codes AND scales
+        bitwise from the resident pool — even if the float input
+        drifted — while masked entries re-encode from the input."""
+        rng = np.random.default_rng(7)
+        pool = {"layers": {
+            "k": jnp.asarray(rng.standard_normal((2, 3, 4, 8, 5)),
+                             jnp.bfloat16),
+            "v": jnp.asarray(rng.standard_normal((2, 3, 4, 8, 5)),
+                             jnp.bfloat16),
+            "pos": jnp.zeros((3, 8), jnp.int32)},
+            "idx": jnp.zeros((3,), jnp.int32)}
+        q = serve_quant.quantize_kv(pool)
+        # perturb EVERY entry of the float pool, then requantize with
+        # only entry 1 marked dirty
+        bump = {"layers": dict(
+            pool["layers"],
+            k=pool["layers"]["k"] * jnp.bfloat16(1.5),
+            v=pool["layers"]["v"] * jnp.bfloat16(1.5)),
+            "idx": pool["idx"]}
+        dirty = jnp.asarray([False, True, False])
+        q2 = serve_quant.requantize_kv(bump, like=q, dirty=dirty)
+        q_full = serve_quant.quantize_kv(bump)
+        for leaf in ("k", "v", "k_scale", "v_scale"):
+            new = np.asarray(q2["layers"][leaf])
+            # clean entries: bitwise the resident codes/scales
+            np.testing.assert_array_equal(
+                new[:, [0, 2]], np.asarray(q["layers"][leaf])[:, [0, 2]])
+            # dirty entry: a fresh encode of the perturbed values
+            np.testing.assert_array_equal(
+                new[:, 1], np.asarray(q_full["layers"][leaf])[:, 1])
+
     def test_tree_bytes(self):
         t = {"a": jnp.zeros((4, 4), jnp.float32),
              "b": QTensor(jnp.zeros((4, 4), jnp.int8),

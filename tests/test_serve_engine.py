@@ -305,20 +305,54 @@ def test_engine_hybrid_family_matches_static():
 
 
 def test_engine_recurrent_family_ssm():
-    """ssm caches are recurrent state, not KV: exact-length prefill
-    (no padding) and slot insert/reset still serve a trace."""
+    """ssm caches are recurrent state, not KV — but padded (bucketed)
+    prefill is safe now that the mixers gather their carried state at
+    the real prompt boundary (``state_len``), so ssm shares the
+    bucketed prefill programs. An 11-token prompt rides the 16 bucket
+    and must still match the exact static path token-for-token."""
     cfg = get_smoke_config("falcon-mamba-7b")
     params = _params(cfg)
     prompt, gen = _prompt(cfg, 11, seed=6), 5
     ref = _static_greedy(cfg, params, prompt, gen)
     eng = ServeEngine(cfg, params, EngineConfig(
-        max_slots=2, max_len=32, decode_chunk=2))
-    assert eng.scheduler.exact
+        max_slots=2, max_len=32, decode_chunk=2, buckets=(16,)))
+    assert not eng.scheduler.exact       # only hybrid needs exactness
+    assert eng.scheduler.bucket_for(len(prompt)) == 16
     out = eng.run([Request(0, prompt, max_new_tokens=gen),
                    Request(1, _prompt(cfg, 7, seed=7),
                            max_new_tokens=3)])
     assert out[0].tokens == ref
     assert len(out[1].tokens) == 3
+
+
+def test_ssm_right_padded_prefill_state_exact():
+    """Regression (padded-prefill recurrent-state bug): a right-padded
+    ssm prefill used to return the carried state at the padded tail —
+    conv window over pad junk, scan state past the boundary — which
+    write_slot copied verbatim into the pool. The state for a padded
+    prompt must equal the state of the exact-length prefill bitwise."""
+    cfg = get_smoke_config("falcon-mamba-7b")
+    mod = steps_mod.model_module(cfg)
+    params = _params(cfg)
+    tp, bucket = 11, 16
+    prompt = _prompt(cfg, tp, seed=12)
+
+    exact = mod.init_cache(cfg, 1, 32)
+    lg_e, exact = mod.prefill(
+        cfg, params, {"tokens": jnp.asarray(prompt[None])}, exact,
+        length=jnp.asarray([tp]))
+    padded_toks = np.zeros((1, bucket), np.int32)
+    padded_toks[0, :tp] = prompt
+    padded = mod.init_cache(cfg, 1, 32)
+    lg_p, padded = mod.prefill(
+        cfg, params, {"tokens": jnp.asarray(padded_toks)}, padded,
+        length=jnp.asarray([tp]))
+
+    np.testing.assert_allclose(np.asarray(lg_e), np.asarray(lg_p),
+                               rtol=0, atol=0)
+    for le, lp in zip(jax.tree.leaves(exact["layers"]),
+                      jax.tree.leaves(padded["layers"])):
+        np.testing.assert_array_equal(np.asarray(le), np.asarray(lp))
 
 
 # ---------------------------------------------------------------------------
