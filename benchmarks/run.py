@@ -114,6 +114,7 @@ def main(argv=None):
         kernel_bench,
         kfac_convergence,
         mapping_impact,
+        obs_overhead,
         pipeline_bench,
         precision_ladder,
         roofline,
@@ -175,6 +176,10 @@ def main(argv=None):
     run("wu_fusion", lambda: wu_fusion.main([]))
     # continuous-batching engine vs static decode (CPU-local)
     run("serve_engine", lambda: serve_engine.main([]))
+    # telemetry spine overhead on the train-step and decode-chunk hot
+    # paths (interleaved paired medians, ≤2% budget); BENCH_obs.json
+    run("obs_overhead", lambda: obs_overhead.main(
+        ["--fast"] if args.fast else []))
 
     # paged KV pool + prefix cache vs the slot pool at equal cache
     # bytes; writes BENCH_serve_scale.json

@@ -30,6 +30,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro import obs as obs_mod
 from repro.configs import get_config, get_smoke_config
 from repro.data import SyntheticTokens
 from repro.dist import sharding as shard_rules
@@ -101,6 +102,16 @@ def build_parser() -> argparse.ArgumentParser:
                     help="--paged: shared-prefix cache (repeated "
                          "prompt prefixes prefill once, blocks are "
                          "refcount-shared copy-on-write)")
+    # observability (repro.obs)
+    ap.add_argument("--obs", action="store_true",
+                    help="enable the telemetry spine: TTFT/TPOT/queue/"
+                         "occupancy metrics, spans, console summary")
+    ap.add_argument("--obs-dir", default=None,
+                    help="write JSONL events + Prometheus snapshot + "
+                         "Chrome trace here (implies --obs)")
+    ap.add_argument("--obs-annotate", action="store_true",
+                    help="also emit jax.profiler trace annotations "
+                         "for spans")
     return ap
 
 
@@ -116,7 +127,8 @@ def _trace(cfg, args):
                            args.gen, args.max_slots, seed=args.seed)
 
 
-def serve_engine(cfg, args, mesh):
+def serve_engine(cfg, args, mesh, obs=None):
+    obs = obs if obs is not None else obs_mod.NULL
     mod = steps_mod.model_module(cfg)
     max_len = args.max_len or (args.prompt_len + args.gen)
     if args.paged:
@@ -151,17 +163,26 @@ def serve_engine(cfg, args, mesh):
                         1, min(args.decode_chunk + 1,
                                max_len - len(r.prompt))))
                     for i, r in enumerate(buckets.values())]
-            eng.run(warm)
+            with obs.span("serve_warmup"):
+                eng.run(warm)
             eng.reset_stats()
+        # attach the real sink only now: warmup compiles must not
+        # pollute the steady-state latency histograms
+        eng.set_obs(obs)
         t0 = time.monotonic()
-        done = eng.run(reqs, arrivals=arrivals)
-        jax.block_until_ready(eng._tok)
+        with obs.span("serve_trace", fence=lambda: eng._tok):
+            done = eng.run(reqs, arrivals=arrivals)
+            jax.block_until_ready(eng._tok)
         wall = time.monotonic() - t0
     n_tok = sum(len(f.tokens) for f in done.values())
     st = eng.stats
     summary = {
+        "schema": 1,
+        "kind": "serve_summary",
         "arch": cfg.name,
         "mode": "engine",
+        "scheduler": {"queued": eng.scheduler.n_queued,
+                      "free_slots": eng.scheduler.n_free},
         "sampling": sampling_args(args)["method"],
         "quant": args.quant,
         "resident_bytes": eng.resident_bytes(),
@@ -187,7 +208,15 @@ def serve_engine(cfg, args, mesh):
             "prefix_hit_tokens": st["prefix_hit_tokens"],
             "preemptions": st["preemptions"],
             "evictions": st["evictions"],
+            "free_blocks": eng.free_blocks,
+            "free_blocks_low_watermark": eng._ledger.low_watermark,
         })
+    if obs.enabled:
+        rb = summary["resident_bytes"]
+        obs.gauge("serve_resident_params_bytes",
+                  "resident weight-tree bytes").set(rb["params"])
+        obs.gauge("serve_resident_pool_bytes",
+                  "resident KV pool bytes").set(rb["pool"])
     return summary, done
 
 
@@ -264,6 +293,8 @@ def serve_static(cfg, args, mesh):
 
     gen = np.concatenate([np.asarray(t) for t in out_tokens], axis=1)
     summary = {
+        "schema": 1,
+        "kind": "serve_summary",
         "arch": cfg.name,
         "mode": "static",
         "sampling": sampling_args(args)["method"],
@@ -284,12 +315,22 @@ def main(argv=None):
     args = build_parser().parse_args(argv)
     cfg = (get_smoke_config if args.smoke else get_config)(args.arch)
     mesh = make_dev_mesh(args.model_parallel)
+    obs = obs_mod.from_args(args)
     # vlm/audio prompts need modality inputs the engine doesn't take
     # yet — those archs keep serving on the fixed-batch path
     if args.static or cfg.family in ("vlm", "audio"):
-        summary, out = serve_static(cfg, args, mesh)
+        with obs.span("serve_static"):
+            summary, out = serve_static(cfg, args, mesh)
     else:
-        summary, out = serve_engine(cfg, args, mesh)
+        summary, out = serve_engine(cfg, args, mesh, obs=obs)
+    if obs.enabled:
+        # both engines' end-of-run summaries go through the same
+        # exporters: a schema-stable JSONL record + the metric snapshot
+        paths = obs.flush(summary=summary)
+        print(obs.console("serve summary"))
+        if paths:
+            print(json.dumps({"obs_artifacts": paths}, indent=1))
+        obs.close()
     print(json.dumps(summary, indent=1))
     return summary, out
 

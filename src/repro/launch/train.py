@@ -19,15 +19,18 @@ technique) every ``--inv-every`` steps.
 from __future__ import annotations
 
 import argparse
+import contextlib
 import dataclasses
 import json
 import logging
+import time
 from functools import partial
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 
+from repro import obs as obs_mod
 from repro.configs import get_config, get_smoke_config
 from repro.core import kfac, quantize
 from repro.core.kfac import KFACConfig
@@ -55,6 +58,21 @@ def _key_of_path(path) -> str:
 def _sharding_lookup(tree) -> dict:
     leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
     return {_key_of_path(p): s for p, s in leaves}
+
+
+@contextlib.contextmanager
+def _phase(obs, hist, name):
+    """Phase span + dispatch-wall histogram sample. Dispatch-timed on
+    purpose: fencing each phase would serialize exactly the async
+    overlap (inv refresh, pipelined microbatches) the phases exist to
+    exploit; the loop's own step fence gives the honest total."""
+    if hist is None:
+        yield
+        return
+    t0 = time.perf_counter()
+    with obs.tracer.span(f"phase:{name}", cat="dispatch"):
+        yield
+    hist.observe(time.perf_counter() - t0, phase=name)
 
 
 @dataclasses.dataclass
@@ -96,11 +114,14 @@ class KFACProgram:
     smw: bool = False
     smw_drift_budget: float = 0.05
     smw_rank: int = 64
+    obs: Any = None
 
     def __post_init__(self):
         self._refresher = None
         self._smw = None
         self._sched = None
+        if self.obs is None:
+            self.obs = obs_mod.NULL
         if self.smw and self.async_inv:
             raise ValueError(
                 "--smw refreshes the inverses inside every step; there "
@@ -182,7 +203,8 @@ class KFACProgram:
                     ab.kfac.inverses),
                 out_shardings=inv_shard)()
             self._refresher = AsyncInverseRefresher(
-                refresh_into=refresh_into, spare_buffers=spare)
+                refresh_into=refresh_into, spare_buffers=spare,
+                obs=self.obs)
         else:
             self._refresher = None
         if self.smw:
@@ -194,13 +216,19 @@ class KFACProgram:
                 out_shardings=(st_shard, None),
                 donate_argnums=(0,))
             self._smw = SMWRefresher(smw_jit, refresh_into,
-                                     drift_budget=self.smw_drift_budget)
+                                     drift_budget=self.smw_drift_budget,
+                                     obs=self.obs)
         else:
             self._smw = None
         refresher = self._refresher
         smw_ref = self._smw
         kcfg = self.kcfg
         sched = self._sched
+        obs = self.obs
+        phase_h = obs.histogram(
+            "train_phase_s",
+            "per-phase dispatch wall (stats/inv/smw/train)") \
+            if obs.enabled else None
 
         def subsample(batch):
             sb = min(batch["tokens"].shape[0], kcfg.stats_batch)
@@ -218,34 +246,41 @@ class KFACProgram:
                 # incremental SOI: one fused rank-k program every step
                 # (stats + EMA + SMW inverse update + drift probe), the
                 # host gate falls back to refresh_into on drift
-                state, metrics = smw_ref.step(state, subsample(batch))
-                state, m = train(state, batch)
+                with _phase(obs, phase_h, "smw"):
+                    state, metrics = smw_ref.step(state,
+                                                  subsample(batch))
+                with _phase(obs, phase_h, "train"):
+                    state, m = train(state, batch)
                 metrics.update(m)
                 return state, metrics
             i = int(jax.device_get(state.kfac.step))
             metrics = {}
             if i % kcfg.stats_every == 0:
-                state, m = stats(state, subsample(batch))
+                with _phase(obs, phase_h, "stats"):
+                    state, m = stats(state, subsample(batch))
                 metrics.update(m)
             if i % kcfg.inv_every == 0:
-                if refresher is not None and sched is not None:
-                    # pipelined: dispatch the refresh just before the
-                    # pipeline program so INV overlaps its bubbles
-                    from repro.pipeline import kfac_glue
+                with _phase(obs, phase_h, "inv"):
+                    if refresher is not None and sched is not None:
+                        # pipelined: dispatch the refresh just before
+                        # the pipeline program so INV overlaps its
+                        # bubbles
+                        from repro.pipeline import kfac_glue
 
-                    kstate, info = kfac_glue.bubble_refresh(
-                        refresher, state.kfac, sched)
-                    state = state._replace(kfac=kstate)
-                    metrics.update(info)
-                elif refresher is not None:
-                    state = state._replace(
-                        kfac=refresher.step(state.kfac))
-                else:
-                    kst = state.kfac
-                    state = state._replace(kfac=kst._replace(
-                        inverses=refresh_into(kst.factors,
-                                              kst.inverses)))
-            state, m = train(state, batch)
+                        kstate, info = kfac_glue.bubble_refresh(
+                            refresher, state.kfac, sched)
+                        state = state._replace(kfac=kstate)
+                        metrics.update(info)
+                    elif refresher is not None:
+                        state = state._replace(
+                            kfac=refresher.step(state.kfac))
+                    else:
+                        kst = state.kfac
+                        state = state._replace(kfac=kst._replace(
+                            inverses=refresh_into(kst.factors,
+                                                  kst.inverses)))
+            with _phase(obs, phase_h, "train"):
+                state, m = train(state, batch)
             metrics.update(m)
             return state, metrics
 
@@ -374,9 +409,20 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default=None,
                     help="write metrics history JSON here")
+    # observability (repro.obs)
+    ap.add_argument("--obs", action="store_true",
+                    help="enable the telemetry spine: phase spans, "
+                         "step metrics, recovery/straggler events")
+    ap.add_argument("--obs-dir", default=None,
+                    help="write JSONL events + Prometheus snapshot + "
+                         "Chrome trace here (implies --obs)")
+    ap.add_argument("--obs-annotate", action="store_true",
+                    help="also emit jax.profiler trace annotations "
+                         "for spans")
     args = ap.parse_args(argv)
 
     cfg = (get_smoke_config if args.smoke else get_config)(args.arch)
+    obs = obs_mod.from_args(args)
     kcfg = KFACConfig(
         lr=args.lr, damping=args.damping,
         stats_every=args.stats_every, inv_every=args.inv_every,
@@ -393,7 +439,8 @@ def main(argv=None):
                               pp_schedule=args.pp_schedule,
                               smw=args.smw,
                               smw_drift_budget=args.smw_drift_budget,
-                              smw_rank=args.smw_rank)
+                              smw_rank=args.smw_rank,
+                              obs=obs)
     else:
         if args.pp > 1:
             raise SystemExit("--pp > 1 is a KFACProgram feature; the "
@@ -416,7 +463,8 @@ def main(argv=None):
                    model_parallel=args.model_parallel,
                    pipeline_parallel=args.pp),
         program, ds,
-        inject=inject if args.inject_failure_at >= 0 else None)
+        inject=inject if args.inject_failure_at >= 0 else None,
+        obs=obs)
     summary = loop.run()
     print(json.dumps({k: v for k, v in summary.items()
                       if k != "history"}, indent=1))
@@ -427,6 +475,14 @@ def main(argv=None):
     if args.out:
         with open(args.out, "w") as f:
             json.dump(summary, f, indent=1)
+    if obs.enabled:
+        paths = obs.flush(summary={
+            "kind": "train_summary",
+            **{k: v for k, v in summary.items() if k != "history"}})
+        print(obs.console("train summary"))
+        if paths:
+            print(json.dumps({"obs_artifacts": paths}, indent=1))
+        obs.close()
     return summary
 
 

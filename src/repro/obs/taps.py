@@ -1,0 +1,101 @@
+"""Non-blocking device-side metric taps.
+
+Two pieces, both built on the same observation: a jitted step already
+*returns* its scalar metrics as device arrays, and the expensive part
+is not producing them but reading them back — each ``float(v)`` is a
+full device sync, and the old train loop paid one per metric per
+logged step (``runtime/loop.py``).
+
+* :class:`TapBuffer` — the host side. ``push`` stores the step's
+  device metrics without touching them (async dispatch keeps running);
+  ``drain`` reads **everything buffered with ONE batched**
+  ``jax.device_get`` — one sync per ``log_every`` window instead of
+  ``n_metrics`` syncs per logged step, and every step's scalars are
+  retained, not just the logged cadence.
+
+* :func:`with_taps` — the device side. Wraps a jitted step function so
+  extra scalar taps are computed *inside the same program* as an extra
+  output pytree leaf. The wrapped step's state output is the original
+  step's state output by construction (the taps only read it), so a
+  tapped step is bitwise-identical to the untapped one — the property
+  ``tests/test_obs.py`` pins and the <=2% overhead budget
+  (``benchmarks/obs_overhead.py``) prices.
+
+Tap values may live on any mesh (fully-replicated scalars from a
+shard_map program included): ``jax.device_get`` resolves them the same
+way the old per-metric ``float`` did, just batched.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+__all__ = ["TapBuffer", "with_taps"]
+
+
+class TapBuffer:
+    """Buffer of (tag, device-metrics) pairs drained in one batch.
+
+    ``tag`` is caller-defined (the train loop uses the step index).
+    ``push`` must never block — it only appends references. ``drain``
+    performs exactly one ``jax.device_get`` on the list-of-dicts pytree
+    and returns ``[(tag, {name: float})]`` in push order. ``clear``
+    drops buffered references *without* reading them — the recovery
+    path uses it, because a device_get on arrays poisoned by a device
+    loss would itself raise.
+    """
+
+    def __init__(self):
+        self._buf: List[Tuple[Any, Dict[str, Any]]] = []
+        self.n_drains = 0
+
+    def __len__(self) -> int:
+        return len(self._buf)
+
+    def push(self, tag: Any, metrics: Dict[str, Any]) -> None:
+        self._buf.append((tag, metrics))
+
+    def clear(self) -> None:
+        self._buf.clear()
+
+    def drain(self) -> List[Tuple[Any, Dict[str, float]]]:
+        if not self._buf:
+            return []
+        import jax
+
+        tags = [t for t, _ in self._buf]
+        # ONE transfer for the whole window (list-of-dicts is a pytree)
+        host = jax.device_get([m for _, m in self._buf])
+        self._buf.clear()
+        self.n_drains += 1
+        out = []
+        for tag, m in zip(tags, host):
+            out.append((tag, {k: float(v) for k, v in m.items()}))
+        return out
+
+
+def with_taps(step_fn: Callable,
+              tap_fns: Optional[Dict[str, Callable]] = None) -> Callable:
+    """Wrap ``step_fn(state, batch) -> (state, metrics)`` so each
+    ``tap_fns[name](state, metrics)`` scalar is computed inside the
+    same jitted program and merged into the returned metrics.
+
+    The taps receive the *output* state (read-only); the state returned
+    to the caller is exactly ``step_fn``'s — tapped and untapped steps
+    are bitwise-identical in state. A tap name colliding with an
+    existing metric key raises at trace time (silent overwrite would
+    corrupt the history schema).
+    """
+    tap_fns = dict(tap_fns or {})
+
+    def tapped(state, batch):
+        state2, metrics = step_fn(state, batch)
+        out = dict(metrics)
+        for name, fn in tap_fns.items():
+            if name in out:
+                raise ValueError(
+                    f"tap {name!r} collides with an existing metric key")
+            out[name] = fn(state2, metrics)
+        return state2, out
+
+    return tapped

@@ -17,7 +17,7 @@ preemption notice.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence
+from typing import Any, Optional, Sequence
 
 import jax
 from jax.sharding import Mesh
@@ -65,12 +65,15 @@ def elastic_mesh(
     pp: int = 1,
     devices: Optional[Sequence] = None,
     exclude: int = 0,
+    obs: Any = None,
 ) -> Mesh:
     """Build the largest healthy (data, model) mesh — with ``pp > 1``,
     a (stage, data, model) pipeline mesh (repro.pipeline).
 
     ``exclude`` drops that many devices from the tail of the pool —
-    the test/drill hook for simulating a lost host.
+    the test/drill hook for simulating a lost host. ``obs`` (a
+    ``repro.obs.Observability``) records every (re-)mesh as an event +
+    counter, so elastic shrinkage is visible in the telemetry stream.
     """
     devs = list(devices if devices is not None else jax.devices())
     if exclude:
@@ -84,4 +87,9 @@ def elastic_mesh(
     n = math.prod(shape)
     arr = np.array(devs[:n]).reshape(shape)
     names = ("stage", "data", "model") if pp > 1 else ("data", "model")
+    if obs is not None and getattr(obs, "enabled", False):
+        obs.counter("runtime_remesh_total",
+                    "mesh (re-)formations, recoveries included").inc()
+        obs.event("remesh", shape=dict(zip(names, shape)),
+                  n_devices=n, excluded=exclude)
     return Mesh(arr, names)

@@ -32,6 +32,7 @@ import jax
 
 from repro.checkpoint import CheckpointManager, latest_step, restore
 from repro.data import DataCursor, SyntheticTokens, make_global_batch
+from repro.obs import NULL as NULL_OBS, Observability, TapBuffer
 from repro.runtime.watchdog import StepDeadlineExceeded, StepWatchdog
 
 log = logging.getLogger("repro.runtime")
@@ -75,6 +76,7 @@ class TrainLoop:
         *,
         mesh_fn: Optional[Callable[..., Any]] = None,
         inject: Optional[Callable[[int], None]] = None,
+        obs: Optional[Observability] = None,
     ):
         """``inject(step)`` is the fault-drill hook: tests/examples raise
         DeviceLoss/StepDeadlineExceeded from it to exercise recovery."""
@@ -83,18 +85,47 @@ class TrainLoop:
         self.cfg = cfg
         self.program = program
         self.dataset = dataset
+        self.obs = obs if obs is not None else NULL_OBS
         self.mesh_fn = mesh_fn or (
             lambda exclude=0: elastic_mesh(cfg.model_parallel,
                                            pp=cfg.pipeline_parallel,
-                                           exclude=exclude))
+                                           exclude=exclude,
+                                           obs=self.obs))
         self.inject = inject
         self.ckpt = CheckpointManager(cfg.ckpt_dir, keep=cfg.keep)
         self.watchdog = StepWatchdog(
             straggler_factor=cfg.straggler_factor,
-            hard_deadline_s=cfg.hard_deadline_s)
+            hard_deadline_s=cfg.hard_deadline_s,
+            obs=self.obs)
         self.metrics_history: list = []
         self.n_recoveries = 0
         self._mesh_cm = None
+        # device metrics buffered per step, drained in one batched
+        # transfer per log_every window (repro.obs.taps)
+        self._taps = TapBuffer()
+        if self.obs.enabled:
+            self._c_steps = self.obs.counter(
+                "train_steps_total", "completed train steps")
+            self._c_recov = self.obs.counter(
+                "train_recoveries_total", "elastic checkpoint-restores")
+            self._c_ckpt = self.obs.counter(
+                "train_checkpoints_total", "async checkpoint snapshots")
+
+    def _drain_taps(self):
+        """One batched device_get for every buffered step; record ALL
+        of them in the history (the old loop sampled at log_every).
+        Returns the last drained row for formatting, or None."""
+        rows = self._taps.drain()
+        last = None
+        for tag, m in rows:
+            row = {"step": tag, **m}
+            self.metrics_history.append(row)
+            last = row
+            if self.obs.enabled:
+                self.obs.write({"kind": "train_step", **row})
+                for k, v in m.items():
+                    self.obs.gauge(f"train_{k}").set(v)
+        return last
 
     # -- lifecycle ---------------------------------------------------------
 
@@ -142,7 +173,9 @@ class TrainLoop:
                 if self.inject is not None:
                     self.inject(step)
                 batch = make_global_batch(self.dataset, cursor, mesh)
-                with self.watchdog.step():
+                with self.watchdog.step(), \
+                        self.obs.span("train_step",
+                                      args={"step": step}):
                     state, metrics = step_fn(state, batch)
                     jax.block_until_ready(
                         jax.tree.leaves(metrics)[0])
@@ -151,6 +184,14 @@ class TrainLoop:
                     raise
                 failures += 1
                 self.n_recoveries += 1
+                # buffered tap arrays may be poisoned by the device
+                # loss: drop them unread (a device_get would re-raise)
+                self._taps.clear()
+                if self.obs.enabled:
+                    self._c_recov.inc()
+                    self.obs.event("recovery", step=step,
+                                   error=type(e).__name__,
+                                   lost=getattr(e, "lost", 0))
                 log.warning("step %d failed (%s); recovery %d/%d",
                             step, type(e).__name__, failures,
                             self.cfg.max_failures)
@@ -183,13 +224,24 @@ class TrainLoop:
 
             failures = 0
             cursor = cursor.advance()
+            if self.obs.enabled:
+                self._c_steps.inc()
             if self.watchdog.last_was_straggler:
                 log.warning("straggler step %d (%d so far)", step,
                             self.watchdog.n_stragglers)
+                if self.obs.enabled:
+                    self.obs.event("straggler", step=step)
+            # push device metrics without reading them (no sync);
+            # drain the whole window in ONE batched device_get at the
+            # log cadence — every step lands in metrics_history, only
+            # the *formatting* happens at log_every
+            self._taps.push(step, metrics)
             if step % self.cfg.log_every == 0:
-                m = {k: float(v) for k, v in metrics.items()}
-                self.metrics_history.append({"step": step, **m})
-                log.info("step %d %s", step, m)
+                last = self._drain_taps()
+                if last is not None:
+                    log.info("step %d %s", last["step"],
+                             {k: v for k, v in last.items()
+                              if k != "step"})
             if cursor.step % self.cfg.ckpt_every == 0 \
                     or cursor.step == self.cfg.total_steps:
                 # async-refresh programs: snapshot with the in-flight
@@ -200,10 +252,15 @@ class TrainLoop:
                 flush = getattr(self.program, "flush_async", None)
                 save_state = flush(state) if flush is not None \
                     else state
-                self.ckpt.save_async(
-                    cursor.step, save_state,
-                    meta={"cursor": cursor.to_json()})
+                with self.obs.span("ckpt_save_dispatch",
+                                   args={"step": cursor.step}):
+                    self.ckpt.save_async(
+                        cursor.step, save_state,
+                        meta={"cursor": cursor.to_json()})
+                if self.obs.enabled:
+                    self._c_ckpt.inc()
 
+        self._drain_taps()   # tail of the last (partial) window
         self.ckpt.wait()
         if self._mesh_cm is not None:
             self._mesh_cm.__exit__(None, None, None)

@@ -24,7 +24,7 @@ import contextlib
 import statistics
 import threading
 import time
-from typing import List, Optional
+from typing import Any, List, Optional
 
 
 class StepDeadlineExceeded(RuntimeError):
@@ -39,6 +39,7 @@ class StepWatchdog:
         hard_deadline_s: Optional[float] = None,
         window: int = 32,
         warmup_steps: int = 3,
+        obs: Any = None,
     ):
         self.straggler_factor = straggler_factor
         self.hang_factor = hang_factor
@@ -49,6 +50,16 @@ class StepWatchdog:
         self.n_steps = 0
         self.n_stragglers = 0
         self.last_was_straggler = False
+        # observability taps (repro.obs): step-wall histogram +
+        # straggler counter; handles held once, observed per step
+        self._h_wall = self._c_straggler = None
+        if obs is not None and getattr(obs, "enabled", False):
+            self._h_wall = obs.histogram(
+                "train_step_wall_s",
+                "fenced per-step wall time (watchdog clock)")
+            self._c_straggler = obs.counter(
+                "train_stragglers_total",
+                "steps exceeding straggler_factor x median")
 
     def median(self) -> Optional[float]:
         if len(self.times) < max(self.warmup_steps, 1):
@@ -95,11 +106,15 @@ class StepWatchdog:
                 timer.cancel()
         dt = time.monotonic() - t0
         self.n_steps += 1
+        if self._h_wall is not None:
+            self._h_wall.observe(dt)
         med = self.median()
         self.last_was_straggler = bool(
             med is not None and dt > self.straggler_factor * med)
         if self.last_was_straggler:
             self.n_stragglers += 1
+            if self._c_straggler is not None:
+                self._c_straggler.inc()
         else:
             # stragglers do not pollute the healthy-time window
             self.times.append(dt)

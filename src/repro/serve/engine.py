@@ -37,6 +37,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.obs import NULL as NULL_OBS
 from repro.serve import pool as pool_mod
 from repro.serve.sampling import make_sampler
 
@@ -174,7 +175,8 @@ class EngineConfig:
 
 
 class ServeEngine:
-    def __init__(self, cfg, params, ecfg: EngineConfig, mesh=None):
+    def __init__(self, cfg, params, ecfg: EngineConfig, mesh=None,
+                 obs=None):
         if cfg.family in ("vlm", "audio"):
             raise NotImplementedError(
                 f"{cfg.family} requests need modality inputs at prefill; "
@@ -224,6 +226,40 @@ class ServeEngine:
 
         self.stats: Dict[str, Any] = {}
         self.reset_stats()
+        self._obs = obs if obs is not None else NULL_OBS
+        self._init_obs_handles()
+
+    def set_obs(self, obs) -> None:
+        """(Re)bind the observability sink — the CLI driver attaches
+        the real one *after* warmup, so TTFT/TPOT histograms hold
+        steady-state numbers only (mirrors ``reset_stats``)."""
+        self._obs = obs if obs is not None else NULL_OBS
+        self._init_obs_handles()
+
+    def _init_obs_handles(self) -> None:
+        """Metric handles held once; per-token cost when obs is off is
+        one ``enabled`` attribute read per chunk boundary."""
+        o = self._obs
+        if not o.enabled:
+            return
+        self._h_ttft = o.histogram(
+            "serve_ttft_s", "submit -> first sampled token")
+        self._h_tpot = o.histogram(
+            "serve_tpot_s", "decode-chunk wall / tokens emitted")
+        self._h_chunk = o.histogram(
+            "serve_decode_chunk_s", "jitted decode-chunk wall")
+        self._h_prefill = o.histogram(
+            "serve_prefill_s", "per-admission prefill wall")
+        self._c_req = o.counter(
+            "serve_requests_total", "requests submitted")
+        self._c_fin = o.counter(
+            "serve_finished_total", "requests finished, by reason")
+        self._c_tok = o.counter(
+            "serve_tokens_total", "decode tokens emitted")
+        self._g_queue = o.gauge(
+            "serve_queue_depth", "requests waiting for a slot")
+        self._g_occ = o.gauge(
+            "serve_slot_occupancy", "active slots / max_slots")
 
     def _build_pool(self):
         """Allocate the resident KV pool (subclass hook: the paged
@@ -405,6 +441,9 @@ class ServeEngine:
                 "positions would no longer be identity-mapped")
         self._t_submit[req.rid] = time.monotonic()
         self.scheduler.submit(req)
+        if self._obs.enabled:
+            self._c_req.inc()
+            self._g_queue.set(self.scheduler.n_queued)
 
     @property
     def n_active(self) -> int:
@@ -434,6 +473,9 @@ class ServeEngine:
             self.stats["prefills"] += 1
             self.stats["prefill_tokens"] += bucket
             self.stats["prefill_s"] += now - t0
+            if self._obs.enabled:
+                self._h_prefill.observe(now - t0)
+                self._h_ttft.observe(ttft)
 
     def _release_slot(self, slot: int) -> None:
         """Return a finished slot's resources (subclass hook: the paged
@@ -454,6 +496,12 @@ class ServeEngine:
             done.append(FinishedRequest(st.req.rid, st.req.prompt,
                                         st.tokens, reason, st.ttft_s))
             self._release_slot(slot)
+            if self._obs.enabled:
+                self._c_fin.inc(reason=reason)
+                self._obs.write({
+                    "kind": "request_finished", "rid": st.req.rid,
+                    "reason": reason, "ttft_s": st.ttft_s,
+                    "n_tokens": len(st.tokens)})
         self._finished.extend(done)
         return done
 
@@ -478,18 +526,29 @@ class ServeEngine:
             return done + self._harvest()
         t0 = time.monotonic()
         self._key, sub = jax.random.split(self._key)
-        (self._pool, self._tok, self._active, self._remaining, sub,
-         toks, emitted) = self._decode(
-            self.params, self._pool, self._tok, self._active,
-            self._remaining, self._eos, sub)
-        toks = np.asarray(toks)                  # (chunk, B)
+        with self._obs.span("decode_chunk", cat="serve"):
+            (self._pool, self._tok, self._active, self._remaining, sub,
+             toks, emitted) = self._decode(
+                self.params, self._pool, self._tok, self._active,
+                self._remaining, self._eos, sub)
+            toks = np.asarray(toks)              # (chunk, B) -- syncs
         emitted = np.asarray(emitted)
+        dt = time.monotonic() - t0
         self.stats["decode_chunks"] += 1
-        self.stats["decode_s"] += time.monotonic() - t0
+        self.stats["decode_s"] += dt
+        n_emitted = 0
         for slot, st in self._slots.items():
             got = toks[emitted[:, slot], slot]
             st.tokens.extend(int(t) for t in got)
-            self.stats["decode_tokens"] += int(emitted[:, slot].sum())
+            n_emitted += int(emitted[:, slot].sum())
+        self.stats["decode_tokens"] += n_emitted
+        if self._obs.enabled:
+            self._h_chunk.observe(dt)
+            if n_emitted:
+                self._c_tok.inc(n_emitted)
+                self._h_tpot.observe(dt / n_emitted)
+            self._g_queue.set(self.scheduler.n_queued)
+            self._g_occ.set(len(self._slots) / self.ecfg.max_slots)
         return done + self._harvest()
 
     def run(self, requests: Sequence[Request],

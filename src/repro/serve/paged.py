@@ -281,6 +281,10 @@ class BlockLedger:
         self.free = np.arange(n_blocks, dtype=np.int32)
         self.top = n_blocks
         self.refcount = np.zeros(n_blocks, np.int64)
+        # tightest the free stack ever got — the capacity-planning
+        # number the obs layer exports (how close to backpressure the
+        # run sailed)
+        self.low_watermark = n_blocks
 
     def _pop(self, n: int) -> List[int]:
         if n > self.top:
@@ -289,6 +293,8 @@ class BlockLedger:
                 "(backpressure must run before any pop)")
         ids = [int(self.free[self.top - 1 - k]) for k in range(n)]
         self.top -= n
+        if self.top < self.low_watermark:
+            self.low_watermark = self.top
         return ids
 
     def _push(self, bid: int) -> None:
@@ -446,10 +452,11 @@ class PagedServeEngine(ServeEngine):
     chunk) and the admission/release paths (prefix cache, refcounted
     reclaim, backpressure)."""
 
-    def __init__(self, cfg, params, ecfg: PagedConfig, mesh=None):
+    def __init__(self, cfg, params, ecfg: PagedConfig, mesh=None,
+                 obs=None):
         if not isinstance(ecfg, PagedConfig):
             ecfg = PagedConfig(**dataclasses.asdict(ecfg))
-        super().__init__(cfg, params, ecfg, mesh)
+        super().__init__(cfg, params, ecfg, mesh, obs=obs)
         self._ledger = BlockLedger(self._n_blocks, ecfg.max_slots,
                                    self._nbps, self._bl)
         self._store: Optional[PrefixStore] = \
@@ -458,6 +465,28 @@ class PagedServeEngine(ServeEngine):
         self._slot_seq: Dict[int, int] = {}
         # fixed pad width for eviction pushes: one compiled program
         self._push_pad = min(64, self._n_blocks)
+
+    def _init_obs_handles(self) -> None:
+        super()._init_obs_handles()
+        o = self._obs
+        if not o.enabled:
+            return
+        self._g_free = o.gauge(
+            "serve_free_blocks", "paged free-list depth")
+        self._g_lowwater = o.gauge(
+            "serve_free_blocks_low_watermark",
+            "tightest free-list depth seen (BlockLedger)")
+        self._c_prefix = o.counter(
+            "serve_prefix_hits_total",
+            "admissions served partly from the prefix store")
+        self._c_prefix_tok = o.counter(
+            "serve_prefix_hit_tokens_total",
+            "prompt tokens skipped via shared prefix blocks")
+        self._c_preempt = o.counter(
+            "serve_preemptions_total",
+            "mid-flight youngest-admission preemptions")
+        self._c_evict = o.counter(
+            "serve_evictions_total", "prefix-store LRU evictions")
 
     # -- construction ------------------------------------------------------
 
@@ -651,6 +680,8 @@ class PagedServeEngine(ServeEngine):
         while len(freed) < want and len(self._store):
             bid = self._store.evict_lru()
             self.stats["evictions"] += 1
+            if self._obs.enabled:
+                self._c_evict.inc()
             if self._ledger.drop_ref(bid):
                 freed.append(bid)
         for lo in range(0, len(freed), self._push_pad):
@@ -705,6 +736,9 @@ class PagedServeEngine(ServeEngine):
                     jnp.asarray(len(suffix), jnp.int32))
                 self.stats["prefix_hits"] += 1
                 self.stats["prefix_hit_tokens"] += n_hit * self._bl
+                if self._obs.enabled:
+                    self._c_prefix.inc()
+                    self._c_prefix_tok.inc(n_hit * self._bl)
             else:
                 bucket = self.scheduler.bucket_for(tp)
                 toks = np.zeros((1, bucket), np.int32)
@@ -743,6 +777,12 @@ class PagedServeEngine(ServeEngine):
             self.stats["prefills"] += 1
             self.stats["prefill_tokens"] += bucket
             self.stats["prefill_s"] += now - t0
+            if self._obs.enabled:
+                self._h_prefill.observe(now - t0)
+                if not isinstance(item, _Resume):
+                    # a resumed preemption keeps its original TTFT —
+                    # re-observing it would double-count the request
+                    self._h_ttft.observe(ttft)
 
     def _release_slot(self, slot: int) -> None:
         mask = self._ledger.release(slot)
@@ -764,6 +804,10 @@ class PagedServeEngine(ServeEngine):
         self.scheduler.queue.appendleft(
             _Resume(st.req, st.tokens, st.ttft_s))
         self.stats["preemptions"] += 1
+        if self._obs.enabled:
+            self._c_preempt.inc()
+            self._obs.event("preempt", rid=st.req.rid, slot=slot,
+                            n_tokens=len(st.tokens))
 
     def _pre_decode(self) -> None:
         """Backpressure: before dispatching a chunk, make sure the free
@@ -787,3 +831,6 @@ class PagedServeEngine(ServeEngine):
                     "construction validates n_blocks >= max_len/bl)")
             self._preempt(max(slots, key=lambda s: self._slot_seq[s]))
         self._ledger.apply_grow(sorted(self._slots), chunk)
+        if self._obs.enabled:
+            self._g_free.set(self._ledger.top)
+            self._g_lowwater.set(self._ledger.low_watermark)

@@ -23,7 +23,12 @@ factors move slowly relative to the parameters.
 
 from __future__ import annotations
 
+import contextlib
 from typing import Any, Callable, Optional
+
+
+def _null_cm():
+    return contextlib.nullcontext()
 
 
 class AsyncInverseRefresher:
@@ -51,7 +56,7 @@ class AsyncInverseRefresher:
 
     def __init__(self, refresh_fn: Optional[Callable[[Any], Any]] = None,
                  refresh_into: Optional[Callable[[Any, Any], Any]] = None,
-                 spare_buffers: Any = None):
+                 spare_buffers: Any = None, obs: Any = None):
         if refresh_fn is None and refresh_into is None:
             raise ValueError(
                 "need refresh_fn and/or refresh_into(+spare_buffers)")
@@ -61,6 +66,15 @@ class AsyncInverseRefresher:
         self._pending: Any = None
         self.n_dispatched = 0
         self.n_swapped = 0
+        self._obs = obs
+        self._c_dispatch = self._c_swap = None
+        if obs is not None and getattr(obs, "enabled", False):
+            self._c_dispatch = obs.counter(
+                "solve_inv_dispatch_total",
+                "async inverse refreshes dispatched")
+            self._c_swap = obs.counter(
+                "solve_inv_swap_total",
+                "lagged inverse trees swapped into the live state")
 
     @property
     def has_pending(self) -> bool:
@@ -76,19 +90,31 @@ class AsyncInverseRefresher:
             kstate = kstate._replace(inverses=self._pending)
             self._pending = None
             self.n_swapped += 1
+            if self._c_swap is not None:
+                self._c_swap.inc()
         if retired is None:
             retired, self._spare = self._spare, None
-        if retired is not None and self.refresh_into is not None:
-            self._pending = self.refresh_into(kstate.factors, retired)
-        else:
-            if self.refresh_fn is None:
-                # donated-only configuration must never silently fall
-                # back to a second (uncompiled) program mid-training
-                raise RuntimeError(
-                    "refresh_into has no retired/spare buffers and no "
-                    "refresh_fn fallback was provided")
-            self._pending = self.refresh_fn(kstate.factors)
+        # dispatch-timed span: the refresh is *meant* to overlap the
+        # following train steps, so fencing here would be a lie about
+        # the design (and would serialize the overlap it measures)
+        span = self._obs.span("inv_refresh_dispatch") \
+            if self._c_dispatch is not None else _null_cm()
+        with span:
+            if retired is not None and self.refresh_into is not None:
+                self._pending = self.refresh_into(kstate.factors,
+                                                  retired)
+            else:
+                if self.refresh_fn is None:
+                    # donated-only configuration must never silently
+                    # fall back to a second (uncompiled) program
+                    # mid-training
+                    raise RuntimeError(
+                        "refresh_into has no retired/spare buffers and "
+                        "no refresh_fn fallback was provided")
+                self._pending = self.refresh_fn(kstate.factors)
         self.n_dispatched += 1
+        if self._c_dispatch is not None:
+            self._c_dispatch.inc()
         return kstate
 
     def peek(self, kstate):
@@ -157,7 +183,7 @@ class SMWRefresher:
 
     def __init__(self, smw_step: Callable[[Any, Any], Any],
                  refresh_into: Callable[[Any, Any], Any],
-                 drift_budget: float):
+                 drift_budget: float, obs: Any = None):
         self.smw_step = smw_step
         self.refresh_into = refresh_into
         self.drift_budget = float(drift_budget)
@@ -165,6 +191,16 @@ class SMWRefresher:
         self.n_steps = 0
         self.n_fallbacks = 0
         self.last_drift = float("nan")
+        self._obs = obs
+        self._g_drift = self._c_fallback = None
+        if obs is not None and getattr(obs, "enabled", False):
+            self._g_drift = obs.gauge(
+                "solve_smw_drift",
+                "lagged SMW probe residual (gate input)")
+            self._c_fallback = obs.counter(
+                "solve_smw_fallback_total",
+                "full re-inversions triggered by the drift gate "
+                "(incl. the seeding step-0 fallback)")
 
     def step(self, state, batch):
         """One training step's refresh: run the fused SMW program, then
@@ -174,6 +210,8 @@ class SMWRefresher:
         if self._drift is not None:
             d = float(self._drift)       # blocks on *last* step only
             self.last_drift = d
+            if self._g_drift is not None:
+                self._g_drift.set(d)
             if not (d <= self.drift_budget):   # NaN drift must trigger
                 fallback = True
         self._drift = metrics.get("smw_drift")
@@ -183,6 +221,10 @@ class SMWRefresher:
             state = state._replace(kfac=kst._replace(
                 inverses=self.refresh_into(kst.factors, kst.inverses)))
             self.n_fallbacks += 1
+            if self._c_fallback is not None:
+                self._c_fallback.inc()
+                self._obs.event("smw_fallback", step=self.n_steps - 1,
+                                drift=self.last_drift)
             # the pending drift was measured on the inverses we just
             # replaced — reading it next step would re-trigger for free
             self._drift = None
